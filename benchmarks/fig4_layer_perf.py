@@ -1,0 +1,66 @@
+"""Fig. 4 reproduction: per-layer core GOPS and TOPS/W of the 9-layer
+always-on benchmark network.
+
+Paper anchors (Sec. III-A):
+  * layer 1: 500M binary ops, up to 230 TOPS/W core efficiency,
+    352 GOPS at 48 MHz
+  * core efficiency drops with smaller WxH maps (relative LD time grows)
+  * FC layers: ~1.5 TOPS/W
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.chip import energy, networks
+
+
+def run(csv: bool = True):
+    t0 = time.perf_counter()
+    p = networks.cifar9(s=1)
+    layers = energy.analyze_program(p)
+    us = (time.perf_counter() - t0) * 1e6
+
+    rows = []
+    print("\n== Fig. 4: per-layer core performance (9-layer net, S=1) ==")
+    print(f"{'layer':34s} {'Mops':>9s} {'GOPS@6M':>9s} {'GOPS@48M':>9s} "
+          f"{'TOPS/W':>8s} {'LD%':>6s}")
+    for l in layers:
+        ld_pct = 100.0 * l.ld_cycles / l.cycles if l.cycles else 0.0
+        print(f"{l.name:34s} {l.ops/1e6:9.1f} {l.gops(6e6):9.1f} "
+              f"{l.gops(48e6):9.1f} {l.tops_per_w():8.1f} {ld_pct:6.1f}")
+        rows.append((l.name, l.ops, l.gops(48e6), l.tops_per_w()))
+
+    conv = [l for l in layers if l.kind == "cnn"]
+    fc = [l for l in layers if l.kind == "fc"]
+    l1 = conv[0]
+    checks = [
+        ("layer1 ops ~500M", l1.ops, 500e6, 0.05),
+        ("layer1 core eff ~230 TOPS/W", l1.tops_per_w(), 230.0, 0.05),
+        ("layer1 GOPS@6MHz ~352 (paper Fig. 4)", l1.gops(6e6), 352.0, 0.10),
+        ("peak GOPS@48MHz ~2800 (Table 1)", l1.gops(48e6), 2800.0, 0.10),
+        ("FC eff ~1.5 TOPS/W", fc[0].tops_per_w(), 1.5, 0.05),
+        ("eff drops with depth", conv[0].tops_per_w() - conv[-1].tops_per_w(),
+         None, None),
+    ]
+    print("\nanchor checks vs paper:")
+    ok = True
+    for name, got, want, tol in checks:
+        if want is None:
+            good = got > 0
+            print(f"  [{'OK' if good else 'FAIL'}] {name}: {got:.2f}")
+        else:
+            err = abs(got - want) / want
+            good = err <= tol
+            print(f"  [{'OK' if good else 'FAIL'}] {name}: {got:.1f} "
+                  f"(paper {want}, err {err:.1%})")
+        ok &= good
+    if csv:
+        print(f"CSV,fig4_layer_perf,{us:.0f},"
+              f"l1_tops_w={l1.tops_per_w():.1f};l1_gops48={l1.gops(48e6):.0f};"
+              f"anchors_ok={int(ok)}")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

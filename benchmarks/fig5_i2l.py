@@ -1,0 +1,74 @@
+"""Fig. 5 reproduction: IO-to-Label (I2L) system performance vs S.
+
+Paper anchors (Sec. III-B / Fig. 5):
+  * S=1: 14.4 uJ/f I2L at ~150 inf/s (CIFAR-10 86%, owner 98.2%)
+  * S=2: 3.47 uJ/f (7 face angles)
+  * S=4: 0.92 uJ/f at up to 1700 inf/s (face detection 94.5% precision)
+  * P @ Emin: 2.2 / 1.8 / 1.6 mW for S=1/2/4
+  * ops/net: 2G / 0.5G / 0.12G for S=1/2/4
+  * I2L efficiency up to 145 TOPS/W
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.chip import energy, networks
+
+PAPER = {  # S -> (i2l uJ/f, ops/net, P mW, inf/s)
+    1: (14.4, 2.0e9, 2.2, 150.0),
+    2: (3.47, 0.5e9, 1.8, 500.0),
+    4: (0.92, 0.125e9, 1.6, 1700.0),
+}
+
+
+def run(csv: bool = True):
+    t0 = time.perf_counter()
+    reports = {s: energy.analyze_net(networks.cifar9(s)) for s in (1, 2, 4)}
+    us = (time.perf_counter() - t0) * 1e6
+
+    print("\n== Fig. 5: I2L energy / throughput / power vs S (9-layer net) ==")
+    print(f"{'S':>2s} {'ops/net':>9s} {'core uJ/f':>10s} {'I2L uJ/f':>9s} "
+          f"{'inf/s':>7s} {'P mW':>6s} {'core T/W':>9s} {'I2L T/W':>8s}")
+    ok = True
+    for s, r in reports.items():
+        print(f"{s:2d} {r.ops_per_inference/1e9:8.2f}G "
+              f"{r.core_energy_per_inference*1e6:10.2f} "
+              f"{r.i2l_energy_per_inference*1e6:9.2f} "
+              f"{r.inferences_per_s:7.0f} {r.power_w*1e3:6.2f} "
+              f"{r.core_tops_per_w:9.1f} {r.i2l_tops_per_w:8.1f}")
+    print("\nanchor checks vs paper (10% band unless noted):")
+    for s, (uj, ops, p_mw, infs) in PAPER.items():
+        r = reports[s]
+        checks = [
+            (f"S={s} I2L uJ/f", r.i2l_energy_per_inference * 1e6, uj, 0.10),
+            (f"S={s} ops/net", r.ops_per_inference, ops, 0.10),
+            (f"S={s} P @Emin [mW]", r.power_w * 1e3, p_mw, 0.25),
+        ]
+        for name, got, want, tol in checks:
+            err = abs(got - want) / want
+            good = err <= tol
+            ok &= good
+            print(f"  [{'OK' if good else 'FAIL'}] {name}: {got:.3g} "
+                  f"(paper {want:.3g}, err {err:.1%})")
+    # throughput scaling: papers says S=4 reaches up to 1700 inf/s
+    s4 = reports[4].inferences_per_s
+    good = s4 >= 1500
+    ok &= good
+    print(f"  [{'OK' if good else 'FAIL'}] S=4 inf/s >= 1500: {s4:.0f} "
+          f"(paper 'up to 1700')")
+    i2l_eff = max(r.i2l_tops_per_w for r in reports.values())
+    good = 95 <= i2l_eff <= 160
+    ok &= good
+    print(f"  [{'OK' if good else 'FAIL'}] peak I2L eff in 95-145 band: "
+          f"{i2l_eff:.0f} TOPS/W")
+    if csv:
+        print(f"CSV,fig5_i2l,{us:.0f},"
+              f"s1_uj={reports[1].i2l_energy_per_inference*1e6:.2f};"
+              f"s4_uj={reports[4].i2l_energy_per_inference*1e6:.2f};"
+              f"anchors_ok={int(ok)}")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -1,0 +1,92 @@
+"""Hillclimb profiler: attribute roofline costs to model operations.
+
+Reads a gzipped optimized-HLO dump (``dryrun.py --dump-hlo``), walks the
+module with while-loop trip-count scaling (same engine as
+launch/hlo_cost.py) and prints the top contributors to each roofline
+term, grouped by the JAX ``op_name`` metadata path — i.e. it answers
+"which *model layer op* owns the dominant term".
+
+    PYTHONPATH=src python -m benchmarks.profile_cell \
+        benchmarks/results/hlo_<cell>.txt.gz [--top 25] [--term bytes]
+"""
+
+from __future__ import annotations
+
+import argparse
+import gzip
+import re
+from collections import defaultdict
+
+from repro.launch import hlo_cost as hc
+
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _group_key(instr: hc.Instr) -> str:
+    m = _OPNAME_RE.search(instr.attrs)
+    if not m:
+        return f"<{instr.op}>"
+    name = m.group(1)
+    # strip jit wrapper + uniquifying indices: keep the semantic tail
+    name = re.sub(r"\[[^\]]*\]", "", name)
+    parts = [p for p in name.split("/") if p and not p.startswith("jit(")]
+    return "/".join(parts[-4:]) if parts else name
+
+
+def profile(text: str, n_chips: int):
+    comps, entry = hc.parse_module(text)
+    memo = {}
+    flops = defaultdict(float)
+    byts = defaultdict(float)
+    coll = defaultdict(float)
+
+    def walk(comp: hc.Computation, scale: float):
+        for i in comp.instrs:
+            if i.op == "while":
+                trips = hc._trip_count(i, comps)
+                mb = re.search(r"body=%([\w\.\-]+)", i.attrs)
+                mc = re.search(r"condition=%([\w\.\-]+)", i.attrs)
+                for sub, t in ((mb, trips), (mc, trips)):
+                    if sub and sub.group(1) in comps:
+                        walk(comps[sub.group(1)], scale * t)
+                continue
+            if i.op in ("call", "async-start", "conditional"):
+                for b in hc._called(i):
+                    if b in comps:
+                        walk(comps[b], scale)
+                continue
+            c = hc._instr_cost(comp, i, comps, memo, n_chips)
+            key = _group_key(i)
+            flops[key] += c.flops * scale
+            byts[key] += c.bytes * scale
+            coll[key] += c.coll_bytes * scale
+
+    walk(comps[entry], 1.0)
+    return flops, byts, coll
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_gz")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--chips", type=int, default=256)
+    args = ap.parse_args()
+
+    with gzip.open(args.hlo_gz, "rt") as f:
+        text = f.read()
+    flops, byts, coll = profile(text, args.chips)
+
+    for title, table, unit, div in [
+            ("FLOPS (per chip)", flops, "GF", 1e9),
+            ("BYTES accessed (per chip)", byts, "GB", 1e9),
+            ("COLLECTIVE wire bytes (per chip)", coll, "GB", 1e9)]:
+        total = sum(table.values())
+        print(f"\n== {title}: total {total/div:.2f} {unit} ==")
+        for k, v in sorted(table.items(), key=lambda kv: -kv[1])[:args.top]:
+            if v <= 0:
+                break
+            print(f"  {v/div:10.3f} {unit}  {v/total:6.1%}  {k}")
+
+
+if __name__ == "__main__":
+    main()

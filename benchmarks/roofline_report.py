@@ -1,0 +1,94 @@
+"""Render the roofline table (EXPERIMENTS.md SS Roofline) from the dry-run
+cell JSONs in benchmarks/results/.
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant one,
+MODEL_FLOPS/HLO_FLOPS (useful-compute ratio) and the roofline fraction
+(useful flops / what the dominant term allows).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load_cells(pattern: str = "dryrun_*.json", results_dir: str = RESULTS,
+               baselines_only: bool = True):
+    """Baseline cells by default; perf-variant cells carry a _<tag> suffix
+    after the mesh name and are reported in EXPERIMENTS.md §Perf."""
+    import re
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, pattern))):
+        if baselines_only and not re.search(r"__(pod|multipod)\.json$", path):
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _advice(c) -> str:
+    dom = c.get("bottleneck", "")
+    if dom == "memory":
+        return "fuse attn/softmax (flash), bf16 intermediates, remat policy"
+    if dom == "collective":
+        return "reshard: fewer TP collectives / bigger DP; overlap a2a"
+    return "larger per-chip tiles; reduce remat recompute"
+
+
+def render(cells, md: bool = False):
+    rows = []
+    hdr = (f"{'arch':18s} {'shape':12s} {'mesh':9s} {'stat':7s} "
+           f"{'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} {'dom':10s} "
+           f"{'useful':>7s} {'roofline':>8s}")
+    sep = "-" * len(hdr)
+    out = [hdr, sep]
+    for c in cells:
+        if c["status"] != "OK":
+            out.append(f"{c['arch']:18s} {c['shape']:12s} {c['mesh']:9s} "
+                       f"{c['status']:7s} {c.get('reason', c.get('error',''))[:60]}")
+            continue
+        useful = min(c["useful_flops_ratio"], 99.0)
+        out.append(
+            f"{c['arch']:18s} {c['shape']:12s} {c['mesh']:9s} {'OK':7s} "
+            f"{c['t_compute']:9.4f} {c['t_memory']:9.4f} "
+            f"{c['t_collective']:9.4f} {c['bottleneck']:10s} "
+            f"{useful:7.2%} {c['roofline_fraction']:8.2%}")
+        rows.append(c)
+    return "\n".join(out), rows
+
+
+def run(csv: bool = True):
+    t0 = time.perf_counter()
+    cells = load_cells()
+    if not cells:
+        print("no dry-run cells found; run: python -m repro.launch.dryrun")
+        return False
+    text, rows = render(cells)
+    print("\n== Roofline table (from dry-run compiled artifacts) ==")
+    print(text)
+    ok_cells = [c for c in cells if c["status"] == "OK"]
+    fails = [c for c in cells if c["status"] == "FAIL"]
+    if ok_cells:
+        worst = min(ok_cells, key=lambda c: c["roofline_fraction"])
+        collbound = [c for c in ok_cells if c["bottleneck"] == "collective"]
+        print(f"\n{len(ok_cells)} OK, "
+              f"{sum(c['status'] == 'SKIPPED' for c in cells)} skipped, "
+              f"{len(fails)} failed")
+        print(f"worst roofline fraction: {worst['arch']}/{worst['shape']}/"
+              f"{worst['mesh']} = {worst['roofline_fraction']:.2%} "
+              f"(dom {worst['bottleneck']}; fix: {_advice(worst)})")
+        print(f"collective-bound cells: "
+              f"{[(c['arch'], c['shape'], c['mesh']) for c in collbound][:6]}")
+    us = (time.perf_counter() - t0) * 1e6
+    if csv:
+        print(f"CSV,roofline_report,{us:.0f},"
+              f"cells_ok={len(ok_cells)};cells_fail={len(fails)}")
+    return not fails
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

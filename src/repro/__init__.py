@@ -1,0 +1,7 @@
+"""repro: BinarEye (Moons et al., 2018) as a production JAX framework.
+
+Tier A: faithful chip reproduction (ISA, neuron array, energy model).
+Tier B: BinaryNet compute + width-scalability as first-class features of a
+multi-pod LM training/serving stack (10 assigned architectures).
+"""
+__version__ = "0.1.0"

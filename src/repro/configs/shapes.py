@@ -1,0 +1,86 @@
+"""Assigned input-shape set + ShapeDtypeStruct input specs for the dry-run.
+
+Four shapes per LM architecture (40 cells total):
+  train_4k     seq 4096,    global_batch 256  -> train_step
+  prefill_32k  seq 32768,   global_batch 32   -> prefill_step
+  decode_32k   seq 32768,   global_batch 128  -> serve_step (1 new token)
+  long_500k    seq 524288,  global_batch 1    -> serve_step; ONLY for
+               sub-quadratic archs (rwkv6, jamba) — see DESIGN.md §4.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (constant/linear-state sequence mixers)
+SUBQUADRATIC = ("rwkv6-3b", "jamba-v0.1-52b")
+
+
+def cell_supported(cfg, shape_name: str) -> tuple[bool, str]:
+    """(supported, reason-if-not) for an (arch x shape) cell."""
+    if shape_name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False, ("full-attention KV cache at 524288 tokens is not a "
+                       "sensible deployment (quadratic prefill; see DESIGN.md §4)")
+    return True, ""
+
+
+def _token_struct(cfg, b, s):
+    if cfg.num_codebooks > 1:
+        return jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b = shape.global_batch
+    if shape.step == "train":
+        s = shape.seq_len
+        specs = {"tokens": _token_struct(cfg, b, s),
+                 "labels": _token_struct(cfg, b, s)}
+        if not cfg.embed_inputs:  # VLM stub: precomputed patch embeddings
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.dtype(cfg.dtype))
+            specs.pop("tokens")
+        if cfg.mrope:
+            specs["positions"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+        return specs
+    if shape.step == "prefill":
+        s = shape.seq_len
+        specs = {"tokens": _token_struct(cfg, b, s)}
+        if not cfg.embed_inputs:
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.dtype(cfg.dtype))
+            specs.pop("tokens")
+        if cfg.mrope:
+            specs["positions"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+        return specs
+    # decode: one new token against a cache of seq_len
+    specs = {"tokens": _token_struct(cfg, b, 1)}
+    if not cfg.embed_inputs:
+        specs["embeds"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))
+        specs.pop("tokens")
+    if cfg.mrope:
+        specs["positions"] = jax.ShapeDtypeStruct((b, 1, 3), jnp.int32)
+    return specs

@@ -1,0 +1,2 @@
+"""Core library: the paper's contribution (BinaryNet compute + the BinarEye
+chip abstraction) as composable JAX modules."""

@@ -1,0 +1,39 @@
+"""BitLinear: the paper's W1A1 compute as a drop-in LM projection layer.
+
+Training path: fake-quant with STE (BinaryNet semantics) — sign(x) . sign(W),
+differentiable through both binarizations.  A learnable per-output scale g
+plays the role the chip's BatchNorm-comparator plays (and folds into an
+integer threshold the same way at deployment).
+
+Inference path: bitpacked XNOR-popcount through the Pallas kernels — the
+TPU analogue of the neuron array datapath.  Both paths agree exactly
+(tests/test_binary_layers.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize
+from repro.kernels import ops as kops
+
+
+def init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (d_out, d_in), dtype) / jnp.sqrt(d_in)
+    return {"w": w, "g": jnp.ones((d_out,), dtype)}
+
+
+def apply_train(params, x: jax.Array) -> jax.Array:
+    """STE fake-quant path (differentiable)."""
+    xb = binarize.ste_sign(x)
+    wb = binarize.ste_sign(params["w"])
+    y = jnp.einsum("...k,nk->...n", xb, wb)
+    return y * params["g"] * (1.0 / jnp.sqrt(x.shape[-1]).astype(y.dtype))
+
+
+def apply_infer(params, x: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """Packed XNOR-popcount path (deployment)."""
+    w_signs = binarize.hard_sign(params["w"])
+    y = kops.binary_linear(x, w_signs, interpret=interpret).astype(jnp.float32)
+    return y * params["g"] * (1.0 / jnp.sqrt(x.shape[-1]))

@@ -1,0 +1,4 @@
+"""Faithful functional + analytical model of the BinarEye chip:
+ISA (programmable depth), neuron array (programmable width S),
+interpreter (reprogrammable weights), energy model (Figs. 4-5, Table 1)."""
+from repro.core.chip import energy, interpreter, isa, networks, neuron_array  # noqa: F401

@@ -1,0 +1,155 @@
+"""Program interpreter: compiles a BinarEye ISA program into jit-able JAX fns.
+
+Two modes mirror the chip's lifecycle:
+
+* ``forward_train``  — BinaryNet training semantics (1st level of
+  flexibility: reprogrammable weights).  Latent float weights, STE sign,
+  BatchNorm before the sign activation.  Differentiable end to end.
+* ``forward_infer``  — deployment semantics.  BN folded into the per-neuron
+  integer threshold comparator; weights/activations are hard +/-1; the
+  compute can run through the packed Pallas XNOR-popcount kernels
+  (``use_kernels=True``) or the float reference path.  Both paths must agree
+  bit-exactly (tested).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize
+from repro.core.chip import isa, neuron_array as na
+
+BN_EPS = 1e-4
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, program: isa.Program) -> Dict[str, Any]:
+    """Latent float params for every instruction (Glorot-ish on latents)."""
+    isa.validate(program)
+    convs, fcs = [], []
+    for (ins, in_h, in_w, in_c, *_rest) in isa.layer_geometry(program):
+        if isinstance(ins, isa.ConvInstr):
+            key, k1 = jax.random.split(key)
+            fan_in = 4 * in_c
+            w = jax.random.normal(k1, (ins.features, 2, 2, in_c)) / jnp.sqrt(fan_in)
+            convs.append(dict(
+                w=w,
+                gamma=jnp.ones((ins.features,)),
+                beta=jnp.zeros((ins.features,)),
+                mean=jnp.zeros((ins.features,)),
+                var=jnp.ones((ins.features,)),
+            ))
+        elif isinstance(ins, isa.FCInstr):
+            key, k1 = jax.random.split(key)
+            w = jax.random.normal(k1, (ins.out_features, ins.in_features))
+            w = w / jnp.sqrt(ins.in_features)
+            fcs.append(dict(w=w))
+    return {"conv": convs, "fc": fcs}
+
+
+# ---------------------------------------------------------------------------
+# Training-mode forward (STE + BatchNorm)
+# ---------------------------------------------------------------------------
+
+def forward_train(params, program: isa.Program, images: jax.Array,
+                  train: bool = True):
+    """Returns (logits, new_params) — new_params carries updated BN stats."""
+    new_conv = []
+    ci = fi = 0
+    x = None
+    for ins in program.instrs:
+        if isinstance(ins, isa.IOInstr):
+            x = na.thermometer_encode(images, ins.bits, ins.channels)
+        elif isinstance(ins, isa.ConvInstr):
+            p = params["conv"][ci]
+            wb = binarize.ste_sign(p["w"])
+            s = na.conv2x2(x, wb)                      # (B, H-1, W-1, F) ints
+            if train:
+                mean = jnp.mean(s, axis=(0, 1, 2))
+                var = jnp.var(s, axis=(0, 1, 2))
+                new_p = dict(p)
+                new_p["mean"] = BN_MOMENTUM * p["mean"] + (1 - BN_MOMENTUM) * mean
+                new_p["var"] = BN_MOMENTUM * p["var"] + (1 - BN_MOMENTUM) * var
+                new_conv.append(new_p)
+            else:
+                mean, var = p["mean"], p["var"]
+                new_conv.append(p)
+            bn = p["gamma"] * (s - mean) * jax.lax.rsqrt(var + BN_EPS) + p["beta"]
+            x = binarize.ste_sign(bn)
+            if ins.maxpool:
+                x = na.maxpool2x2(x)
+            ci += 1
+        elif isinstance(ins, isa.FCInstr):
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            p = params["fc"][fi]
+            wb = binarize.ste_sign(p["w"])
+            s = na.fc(x, wb)
+            if ins.final:
+                x = s                                   # integer logits
+            else:
+                x = binarize.ste_sign(s)
+            fi += 1
+    return x, {"conv": new_conv, "fc": params["fc"]}
+
+
+# ---------------------------------------------------------------------------
+# Inference-mode forward (folded thresholds, optional Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def fold_params(params, program: isa.Program):
+    """Fold BN into integer comparator thresholds (what the chip stores)."""
+    folded_convs = []
+    for p in params["conv"]:
+        tau, flip = binarize.fold_bn_to_threshold(
+            p["gamma"], p["beta"], p["mean"], p["var"], eps=BN_EPS)
+        folded_convs.append(dict(w=binarize.hard_sign(p["w"]), tau=tau, flip=flip))
+    fcs = [dict(w=binarize.hard_sign(p["w"])) for p in params["fc"]]
+    return {"conv": folded_convs, "fc": fcs}
+
+
+def forward_infer(folded, program: isa.Program, images: jax.Array,
+                  use_kernels: bool = False, interpret: bool | None = None):
+    """Deployment forward. Returns (logits, labels)."""
+    ci = fi = 0
+    x = None
+    for ins in program.instrs:
+        if isinstance(ins, isa.IOInstr):
+            x = na.thermometer_encode(images, ins.bits, ins.channels)
+        elif isinstance(ins, isa.ConvInstr):
+            p = folded["conv"][ci]
+            if use_kernels:
+                s = na.conv2x2_packed(x, p["w"], interpret=interpret)
+            else:
+                s = na.conv2x2(x, p["w"])
+            x = na.comparator(s, p["tau"], p["flip"])
+            if ins.maxpool:
+                x = na.maxpool2x2(x)
+            ci += 1
+        elif isinstance(ins, isa.FCInstr):
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            p = folded["fc"][fi]
+            if use_kernels:
+                s = na.fc_packed(x, p["w"], interpret=interpret)
+            else:
+                s = na.fc(x, p["w"])
+            x = s if ins.final else binarize.hard_sign(s)
+            fi += 1
+    return x, jnp.argmax(x, axis=-1)
+
+
+def make_infer_fn(program: isa.Program, use_kernels: bool = False):
+    """Bind the program (static) and jit: images, folded -> labels."""
+    @functools.partial(jax.jit, static_argnames=())
+    def fn(folded, images):
+        return forward_infer(folded, program, images, use_kernels=use_kernels)
+    return fn

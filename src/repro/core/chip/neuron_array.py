@@ -1,0 +1,115 @@
+"""Functional model of the 64-neuron / 4-sub-neuron BinarEye array.
+
+Third level of flexibility (Fig. 3): the 256-wide array is operated at
+width mode S in {1,2,4}: F = C = 256/S features/channels on S images in
+parallel.  Arithmetically a mode-S layer is S independent (256/S)^2 x 2x2
+binary convolutions occupying the same physical array, so the batch axis
+IS the sub-neuron recombination axis — we model it directly as a batch of
+S maps, which keeps the simulation exact while staying jit/vmap friendly.
+
+Two compute paths:
+  * float path: +/-1 floats, einsum — differentiable via STE, used in
+    training and as reference;
+  * packed path: the Pallas XNOR-popcount kernels from repro.kernels, the
+    TPU analogue of the chip datapath (used for inference).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# IO layer: thermometer encoding of b-bit images into +/-1 channels
+# ---------------------------------------------------------------------------
+
+def thermometer_encode(images: jax.Array, bits: int, channels: int) -> jax.Array:
+    """(B, H, W, C_in) integer images in [0, 2^bits) -> (B, H, W, channels) +/-1.
+
+    Each color gets channels//C_in binary planes with uniformly spaced
+    thresholds: plane i of color c is sign(x_c - t_i).  A binary dot
+    product against these planes realizes a monotone piecewise-linear
+    function of the pixel value — the chip's integer-input first layer
+    built from nothing but XNORs (cost counted at the full array width,
+    exactly like the silicon).  Leftover planes are constant +1 (bias).
+    """
+    b, h, w, cin = images.shape
+    per = channels // cin
+    levels = 2 ** bits
+    # thresholds strictly inside (0, levels)
+    t = (jnp.arange(per, dtype=jnp.float32) + 0.5) * (levels / per)
+    x = images.astype(jnp.float32)[..., None]            # (B,H,W,Cin,1)
+    planes = jnp.where(x >= t, 1.0, -1.0)                # (B,H,W,Cin,per)
+    planes = planes.reshape(b, h, w, cin * per)
+    pad = channels - cin * per
+    if pad:
+        planes = jnp.concatenate(
+            [planes, jnp.ones((b, h, w, pad), planes.dtype)], axis=-1)
+    return planes
+
+
+# ---------------------------------------------------------------------------
+# CONV: F x C x 2x2 stride-1 VALID, all neurons in parallel
+# ---------------------------------------------------------------------------
+
+def conv2x2(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Float path. x: (B, H, W, C) +/-1; w: (F, 2, 2, C) +/-1 -> (B, H-1, W-1, F)."""
+    # 4 shifted contractions — identical structure to the chip's 2-bit/step
+    # window reuse (and to the Pallas kernel).
+    h, wd = x.shape[1], x.shape[2]
+    out = 0.0
+    for dy in range(2):
+        for dx in range(2):
+            patch = x[:, dy:h - 1 + dy, dx:wd - 1 + dx, :]
+            out = out + jnp.einsum("byxc,fc->byxf", patch, w[:, dy, dx, :])
+    return out
+
+
+def conv2x2_packed(x_signs: jax.Array, w_signs: jax.Array,
+                   interpret: bool | None = None) -> jax.Array:
+    """Packed XNOR-popcount path via the Pallas kernel (per-image vmap)."""
+    c = x_signs.shape[-1]
+    f = w_signs.shape[0]
+    x_words = binarize.pack_signs(x_signs, axis=-1)              # (B,H,W,Cw)
+    w_words = binarize.pack_signs(
+        w_signs.reshape(f, 4, c), axis=-1)                       # (F,4,Cw)
+    conv = lambda img: kops.binary_conv2x2(img, w_words, c, interpret=interpret)
+    return jax.vmap(conv)(x_words).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Streamed max-pool and the binary comparator
+# ---------------------------------------------------------------------------
+
+def maxpool2x2(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max-pool; odd trailing row/col dropped (as streamed HW)."""
+    b, h, w, c = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, :h2 * 2, :w2 * 2, :].reshape(b, h2, 2, w2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def comparator(s: jax.Array, tau: jax.Array, flip: jax.Array) -> jax.Array:
+    """Per-feature threshold comparator (folded BN+sign), +/-1 output."""
+    return binarize.threshold_activation(s, tau, flip)
+
+
+# ---------------------------------------------------------------------------
+# FC layer
+# ---------------------------------------------------------------------------
+
+def fc(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, IN) +/-1; w: (OUT, IN) +/-1 -> (B, OUT) integer scores."""
+    return jnp.einsum("bi,oi->bo", x, w)
+
+
+def fc_packed(x_signs: jax.Array, w_signs: jax.Array,
+              interpret: bool | None = None) -> jax.Array:
+    xw = binarize.pack_signs(x_signs, axis=-1)
+    ww = binarize.pack_signs(w_signs, axis=-1)
+    return kops.xnor_matmul(xw, ww, x_signs.shape[-1],
+                            interpret=interpret).astype(jnp.float32)

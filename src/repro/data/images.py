@@ -1,0 +1,38 @@
+"""Synthetic image pipeline for the chip networks (CIFAR-like, 7-bit RGB).
+
+Class-conditional blobs + noise: class identity is recoverable (a trained
+BinaryNet separates them), deterministic per (seed, step).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def class_templates(key, num_classes: int, h: int = 32, w: int = 32,
+                    channels: int = 3, levels: int = 128):
+    """Smooth per-class templates in [0, levels)."""
+    freqs = jax.random.normal(key, (num_classes, 4, channels))
+    yy = jnp.linspace(0, 3.14159 * 2, h)[:, None, None]
+    xx = jnp.linspace(0, 3.14159 * 2, w)[None, :, None]
+    t = (jnp.sin(yy * (1 + freqs[:, 0][:, None, None]) )
+         + jnp.cos(xx * (1 + freqs[:, 1][:, None, None]))
+         + jnp.sin((yy + xx) * freqs[:, 2][:, None, None]))
+    t = (t - t.min()) / (t.max() - t.min() + 1e-9)
+    return (t * (levels - 1)).astype(jnp.int32)
+
+
+def batch_for_step(step: int, *, batch: int, num_classes: int = 10,
+                   h: int = 32, w: int = 32, channels: int = 3,
+                   levels: int = 128, seed: int = 0):
+    """Returns (images (B,H,W,C) int32 in [0,levels), labels (B,))."""
+    tkey = jax.random.PRNGKey(seed)
+    templates = class_templates(tkey, num_classes, h, w, channels, levels)
+    key = jax.random.fold_in(jax.random.fold_in(tkey, 1), step)
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (batch,), 0, num_classes)
+    base = templates[labels]
+    noise = jax.random.normal(k2, base.shape) * levels * 0.15
+    img = jnp.clip(base + noise.astype(jnp.int32), 0, levels - 1)
+    return img, labels

@@ -1,0 +1,94 @@
+"""Fault tolerance for 1000+ node runs.
+
+Layers of defense (all exercised in tests/test_fault.py):
+
+1. **Checkpoint/restart** — AsyncCheckpointer every N steps; the training
+   loop resumes from ``latest_step`` after any crash.  Data is step-indexed
+   (data/tokens.py) so the resumed run consumes identical batches.
+2. **Preemption** — SIGTERM/SIGINT flips a flag; the loop checkpoints at
+   the next step boundary and exits cleanly (TPU maintenance events give
+   ~30s — one step at our scale).
+3. **Straggler mitigation** — StepTimer keeps a rolling step-time
+   distribution; steps slower than ``threshold x median`` raise a flag the
+   driver uses to (a) log the slow host, (b) trigger the runtime's
+   hot-swap path (on Borg/GKE: recreate the slice member).  Inside a
+   synchronous SPMD step there is no per-host escape hatch — mitigation is
+   detect-and-replace, which matches production practice.
+4. **Elastic re-scale** — checkpoints are topology-free (full arrays), so
+   restore onto a different mesh just re-shards (checkpoint/ckpt.py); data
+   sharding is a pure function of (step, host_id, num_hosts).
+5. **Step retry** — transient collective failures raise; ``retry_step``
+   re-runs the step function up to k times (params are immutable inputs,
+   so a retried step is exact).
+"""
+
+from __future__ import annotations
+
+import collections
+import signal
+import statistics
+import time
+from typing import Callable, Optional
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> request a clean checkpoint-and-exit."""
+
+    def __init__(self, install: bool = True):
+        self.requested = False
+        self._prev = {}
+        if install:
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    self._prev[sig] = signal.signal(sig, self._handler)
+                except ValueError:  # non-main thread (tests)
+                    pass
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def restore(self):
+        for sig, h in self._prev.items():
+            signal.signal(sig, h)
+
+
+class StepTimer:
+    """Rolling step-time stats + straggler detection."""
+
+    def __init__(self, window: int = 50, threshold: float = 3.0):
+        self.times = collections.deque(maxlen=window)
+        self.threshold = threshold
+        self._t0: Optional[float] = None
+        self.stragglers = 0
+
+    def __enter__(self):
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.monotonic() - self._t0
+        self.slow = False
+        if len(self.times) >= 5:
+            med = statistics.median(self.times)
+            if dt > self.threshold * med:
+                self.stragglers += 1
+                self.slow = True
+        self.times.append(dt)
+        return False
+
+    @property
+    def median(self) -> Optional[float]:
+        return statistics.median(self.times) if self.times else None
+
+
+def retry_step(fn: Callable, *args, retries: int = 2,
+               exceptions=(RuntimeError,), on_retry: Callable = None):
+    """Re-run a pure step on transient failure (inputs are immutable)."""
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args)
+        except exceptions:
+            if attempt == retries:
+                raise
+            if on_retry:
+                on_retry(attempt)

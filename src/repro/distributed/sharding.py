@@ -1,0 +1,197 @@
+"""Logical-axis sharding rules: params, batch, cache -> PartitionSpecs.
+
+Logical axes:
+  tp    -> mesh "model"          (tensor parallel: heads / ffn hidden / vocab)
+  fsdp  -> ("pod","data")        (ZeRO-3 weight sharding, only if cfg.fsdp)
+  dp    -> ("pod","data")        (batch)
+  sp    -> mesh "model"          (sequence, in MoE blocks and decode KV)
+  ep    -> mesh "model"          (experts)
+
+Rules are matched on the parameter path string (first match wins); stacked
+scan leaves under ``blocks/`` automatically get a leading ``None``.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import context as dctx
+
+
+def _axes(mesh, cfg):
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    tp = "model" if "model" in mesh.axis_names else None
+    fsdp = dp if cfg.fsdp else None
+    return dp, tp, fsdp
+
+
+def _divisible(dim: int, axes, mesh) -> bool:
+    if axes is None:
+        return False
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def _maybe(dim, axes, mesh):
+    """Use `axes` for this dim only if it divides evenly, else replicate."""
+    return axes if _divisible(dim, axes, mesh) else None
+
+
+def param_rules(cfg, mesh):
+    """Ordered (regex, fn(shape) -> PartitionSpec) rules."""
+    dp, tp, fsdp = _axes(mesh, cfg)
+
+    def spec(*ax):
+        return P(*ax)
+
+    def embed(shape):
+        lead = (None,) * (len(shape) - 2)
+        return P(*lead, _maybe(shape[-2], tp, mesh), _maybe(shape[-1], fsdp, mesh))
+
+    def head(shape):
+        lead = (None,) * (len(shape) - 2)
+        return P(*lead, _maybe(shape[-2], fsdp, mesh), _maybe(shape[-1], tp, mesh))
+
+    def col(shape):   # (in, out) -> out on tp  (wq/wk/wv/wi/wg/in_proj...)
+        return P(_maybe(shape[0], fsdp, mesh), _maybe(shape[1], tp, mesh))
+
+    def row(shape):   # (in, out) -> in on tp   (wo/out_proj/cm_wv...)
+        return P(_maybe(shape[0], tp, mesh), _maybe(shape[1], fsdp, mesh))
+
+    def bias_tp(shape):
+        return P(_maybe(shape[0], tp, mesh))
+
+    def expert_col(shape):  # (E, D, F)
+        return P(_maybe(shape[0], tp, mesh), _maybe(shape[1], fsdp, mesh), None)
+
+    def expert_row(shape):  # (E, F, D)
+        return P(_maybe(shape[0], tp, mesh), None, _maybe(shape[2], fsdp, mesh))
+
+    def repl(shape):
+        return P()
+
+    return [
+        (r"embed/table$", embed),
+        (r"lm_head/w$", head),
+        (r"(attn/(wq|wk|wv)|mlp/(wi|wg)|shared/(wi|wg)|rwkv/(wr|wk|wv|wg|cm_wk|cm_wr)|mamba/in_proj)/w$", col),
+        (r"(attn/wo|mlp/wo|shared/wo|rwkv/(wo|cm_wv)|mamba/out_proj)/w$", row),
+        (r"(attn/(wq|wk|wv)|mlp/(wi|wg)|mamba/in_proj)/b$", bias_tp),
+        (r"moe/(wi|wg)$", expert_col),
+        (r"moe/wo$", expert_row),
+        (r"moe/router$", repl),
+        (r"mamba/conv_w$", lambda s: P(None, _maybe(s[1], tp, mesh))),
+        (r"mamba/conv_b$", bias_tp),
+        (r"mamba/x_proj/w$", lambda s: P(_maybe(s[0], tp, mesh), None)),
+        (r"mamba/dt_proj/w$", lambda s: P(None, _maybe(s[1], tp, mesh))),
+        (r"mamba/dt_proj/b$", bias_tp),
+        (r"mamba/A_log$", lambda s: P(_maybe(s[0], tp, mesh), None)),
+        (r"mamba/D$", bias_tp),
+        (r"rwkv/mix_w1$", lambda s: P(_maybe(s[0], fsdp, mesh), None)),
+        (r".*", repl),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_specs(cfg, mesh, params_shape):
+    """PartitionSpec pytree matching a params (shape) pytree."""
+    rules = param_rules(cfg, mesh)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        stacked = ps.startswith("blocks/")
+        eff_shape = shape[1:] if stacked else shape
+        for pat, fn in rules:
+            if re.search(pat, ps):
+                spec = fn(eff_shape)
+                break
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg, mesh, batch_shape):
+    dp, tp, fsdp = _axes(mesh, cfg)
+
+    def one(path, leaf):
+        b = leaf.shape[0]
+        lead = _maybe(b, dp, mesh)
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_specs(cfg, mesh, cache_shape):
+    """Decode caches: KV seq over 'model' (split-K decode), states over tp."""
+    dp, tp, fsdp = _axes(mesh, cfg)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        stacked = ps.startswith("blocks/")
+        s = shape[1:] if stacked else shape
+        if "wkv" in ps:                       # (B,H,hs,hs)
+            spec = P(_maybe(s[0], dp, mesh), _maybe(s[1], tp, mesh), None, None)
+        elif "shift" in ps:                   # (B,1,d)
+            spec = P(_maybe(s[0], dp, mesh), None, None)
+        elif len(s) == 4:                     # attn kv (B,L,KH,dh)
+            spec = P(_maybe(s[0], dp, mesh), _maybe(s[1], tp, mesh), None, None)
+        elif len(s) == 3:                     # mamba states
+            if s[2] <= 64:                    # (B, di, ds) ssm state
+                spec = P(_maybe(s[0], dp, mesh), _maybe(s[1], tp, mesh), None)
+            else:                             # (B, dc-1, di) conv state
+                spec = P(_maybe(s[0], dp, mesh), None, _maybe(s[2], tp, mesh))
+        else:
+            spec = P(*([None] * len(s)))
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# In-model constraint helper (no-op without a mesh)
+# ---------------------------------------------------------------------------
+
+def constrain(x, logical: tuple):
+    """logical entries: 'dp' | 'tp' | 'sp' | None."""
+    mesh = dctx.current_mesh()
+    if mesh is None or jax.core.get_aval(x).ndim != len(logical):
+        return x
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    table = {"dp": dp, "tp": "model", "sp": "model", None: None}
+    axes = []
+    for dim, l in zip(x.shape, logical):
+        ax = table[l]
+        axes.append(ax if _divisible(dim, ax, mesh) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*axes)))
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the BinarEye binary-compute hot spots.
+
+Layout (per repo convention):
+  <name>.py -- pl.pallas_call + BlockSpec kernel
+  ops.py    -- jit'd public wrappers (auto interpret on CPU)
+  ref.py    -- pure-jnp oracles the kernels are tested against
+"""

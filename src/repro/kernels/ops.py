@@ -1,0 +1,59 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On the CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python); on a real TPU the same code lowers
+through Mosaic.  ``default_interpret()`` picks automatically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize
+from repro.kernels import binarize_pack as _bp
+from repro.kernels import binary_conv2x2 as _bc
+from repro.kernels import xnor_matmul as _xm
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pack(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Fused sign+pack for a (..., K) float array -> (..., ceil(K/32)) uint32."""
+    if interpret is None:
+        interpret = default_interpret()
+    lead = x.shape[:-1]
+    flat = x.reshape((-1, x.shape[-1]))
+    out = _bp.binarize_pack(flat, interpret=interpret)
+    return out.reshape(lead + (out.shape[-1],))
+
+
+def xnor_matmul(a_words: jax.Array, w_words: jax.Array, k: int, *,
+                interpret: bool | None = None, **tiles) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    return _xm.xnor_matmul(a_words, w_words, k=k, interpret=interpret, **tiles)
+
+
+def binary_conv2x2(a_words: jax.Array, w_words: jax.Array, c: int, *,
+                   interpret: bool | None = None, **tiles) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    return _bc.binary_conv2x2(a_words, w_words, c=c, interpret=interpret, **tiles)
+
+
+def binary_linear(x: jax.Array, w_signs: jax.Array, *,
+                  interpret: bool | None = None) -> jax.Array:
+    """End-to-end W1A1 linear for inference: float x, +/-1 weights.
+
+    x: (..., K) float;  w_signs: (N, K) in {-1,+1}.  Returns (..., N) int32
+    (the exact binary dot products; caller applies threshold / scale).
+    """
+    k = x.shape[-1]
+    lead = x.shape[:-1]
+    a_words = pack(x.reshape((-1, k)), interpret=interpret)
+    w_words = binarize.pack_signs(w_signs, axis=-1)
+    out = xnor_matmul(a_words, w_words, k, interpret=interpret)
+    return out.reshape(lead + (w_signs.shape[0],))

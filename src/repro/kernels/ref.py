@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (allclose over
+shape/dtype sweeps, see tests/test_kernels_*.py).  They operate on *unpacked*
++/-1 arrays so the math is transparently the BinaryNet math.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import binarize
+
+
+def xnor_matmul_ref(a_signs: jnp.ndarray, w_signs: jnp.ndarray) -> jnp.ndarray:
+    """Binary matmul oracle.
+
+    a_signs: (M, K) in {-1,+1};  w_signs: (N, K) in {-1,+1}.
+    Returns (M, N) int32 = a @ w.T  (exact integer result).
+    """
+    return jnp.dot(a_signs.astype(jnp.int32), w_signs.astype(jnp.int32).T)
+
+
+def xnor_matmul_packed_ref(a_words, w_words, k: int) -> jnp.ndarray:
+    """Same contract as the kernel: packed uint32 inputs -> int32 (M, N)."""
+    return binarize.xnor_dot_popcount(a_words[:, None, :], w_words[None, :, :], k)
+
+
+def binary_conv2x2_ref(a_signs: jnp.ndarray, w_signs: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-1 VALID binary conv oracle (the chip's only conv shape).
+
+    a_signs: (H, W, C) in {-1,+1};  w_signs: (F, 2, 2, C) in {-1,+1}.
+    Returns (H-1, W-1, F) int32.
+    """
+    h, w, _ = a_signs.shape
+    a = a_signs.astype(jnp.int32)
+    wgt = w_signs.astype(jnp.int32)
+    out = None
+    for dy in range(2):
+        for dx in range(2):
+            patch = a[dy:h - 1 + dy, dx:w - 1 + dx, :]          # (H-1, W-1, C)
+            tap = jnp.einsum("ywc,fc->ywf", patch, wgt[:, dy, dx, :])
+            out = tap if out is None else out + tap
+    return out
+
+
+def binarize_pack_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """sign+pack oracle: (M, K) float -> (M, ceil(K/32)) uint32."""
+    return binarize.pack_signs(binarize.hard_sign(x), axis=-1)

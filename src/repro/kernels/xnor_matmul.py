@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: bitpacked XNOR-popcount binary matmul.
+
+Computes ``out[m, n] = K - 2 * popcount(a[m] ^ w[n])`` over uint32 words —
+the BinarEye neuron dot product, vectorized over the TPU VPU (the MXU has no
+1-bit mode; packing 32 binary channels per int32 lane gives the 32x density
+that the chip gets from its XNOR gates).
+
+Weight-stationarity (the chip's LD-once / CONV-many pattern) is expressed
+through the grid order: the N (neuron) index is the *outermost* grid axis and
+the weight BlockSpec depends only on it, so a weight tile is fetched to VMEM
+once and stays resident while the M (activation positions) axis streams.
+
+VMEM budget per grid step (defaults bm=bn=128, bk=64 words = 2048 channels):
+  a tile 128*64*4B = 32 kB, w tile 32 kB, out tile 128*128*4B = 64 kB,
+  xor broadcast intermediate bm*bn*bk*4B = 4 MB  -> fits the ~16 MB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xnor_matmul_kernel(a_ref, w_ref, out_ref, *, k: int, nk: int):
+    """Grid = (N/bn, M/bm, Kw/bk); accumulate popcounts over the k axis."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...]                      # (bm, bk) uint32
+    w = w_ref[...]                      # (bn, bk) uint32
+    x = jnp.bitwise_xor(a[:, None, :], w[None, :, :])     # (bm, bn, bk)
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    out_ref[...] += jnp.sum(pc, axis=-1)
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        # dot = K - 2 * popcount(disagreements); padding words are zero on
+        # both sides (pack_signs pads with +1 -> bit 0) so they contribute 0.
+        out_ref[...] = jnp.int32(k) - 2 * out_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "bk", "interpret"))
+def xnor_matmul(a_words: jax.Array, w_words: jax.Array, *, k: int,
+                bm: int = 128, bn: int = 128, bk: int = 64,
+                interpret: bool = False) -> jax.Array:
+    """Packed binary matmul.
+
+    a_words: (M, Kw) uint32 packed activations (+1 -> bit0, -1 -> bit1).
+    w_words: (N, Kw) uint32 packed weights.
+    k:       true (unpadded) channel count; output = K - 2*popcount(xor).
+    Returns (M, N) int32.
+    """
+    m, kw = a_words.shape
+    n, kw2 = w_words.shape
+    assert kw == kw2, (kw, kw2)
+
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, kw)
+    # pad to tile multiples (zero words == +1 signs on both sides: no-op)
+    mp, np_, kp = (-m) % bm, (-n) % bn, (-kw) % bk
+    if mp or kp:
+        a_words = jnp.pad(a_words, ((0, mp), (0, kp)))
+    if np_ or kp:
+        w_words = jnp.pad(w_words, ((0, np_), (0, kp)))
+    gm, gn, gk = a_words.shape[0] // bm, w_words.shape[0] // bn, a_words.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_xnor_matmul_kernel, k=k, nk=gk),
+        grid=(gn, gm, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda n_, m_, k_: (m_, k_)),   # activations stream
+            pl.BlockSpec((bn, bk), lambda n_, m_, k_: (n_, k_)),   # weights: loop-invariant in m_
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda n_, m_, k_: (m_, n_)),
+        out_shape=jax.ShapeDtypeStruct((a_words.shape[0], w_words.shape[0]), jnp.int32),
+        interpret=interpret,
+    )(a_words, w_words)
+    return out[:m, :n]

@@ -1,0 +1,242 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be executed as a fresh process (``python -m repro.launch.dryrun``):
+the first two lines below force 512 host platform devices BEFORE any other
+import so ``jax.make_mesh((2,16,16))`` can build the production mesh on
+this CPU-only container.  Smoke tests / benches import other modules and
+see 1 device.
+
+Per cell this script:
+  1. builds the jitted step (train/prefill/decode) with in/out shardings,
+  2. ``.lower()`` on ShapeDtypeStruct inputs (no allocation),
+  3. ``.compile()`` — sharding mismatches / unsupported collectives fail here,
+  4. records memory_analysis + cost_analysis + parsed collective bytes
+     (launch/roofline.py) to a JSON cell file for EXPERIMENTS.md.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import shapes as shp            # noqa: E402
+from repro.configs.base import active_param_count  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+from repro.distributed import context as dctx, sharding as shd  # noqa: E402
+from repro.launch import mesh as mesh_lib, roofline  # noqa: E402
+from repro.models import transformer               # noqa: E402
+from repro.optim import optimizers as opt          # noqa: E402
+from repro.train import serve, steps               # noqa: E402
+
+
+def build_optimizer(cfg):
+    lr = opt.cosine_schedule(3e-4, warmup=100, total=10000)
+    return opt.make(cfg.optimizer, lr)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                        spec_tree,
+                        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               overrides=None, dump_hlo: str = None):
+    overrides = dict(overrides or {})
+    rwkv_over = {k[5:]: overrides.pop(k) for k in list(overrides)
+                 if k.startswith("rwkv_")}
+    moe_over = {k[4:]: overrides.pop(k) for k in list(overrides)
+                if k.startswith("moe_")}
+    mamba_over = {k[6:]: overrides.pop(k) for k in list(overrides)
+                  if k.startswith("mamba_")}
+    cfg = get_config(arch, **overrides)
+    import dataclasses
+    if rwkv_over and cfg.rwkv is not None:
+        cfg = cfg.with_(rwkv=dataclasses.replace(cfg.rwkv, **rwkv_over))
+    if moe_over and cfg.moe is not None:
+        cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, **moe_over))
+    if mamba_over and cfg.mamba is not None:
+        cfg = cfg.with_(mamba=dataclasses.replace(cfg.mamba, **mamba_over))
+    shape = shp.SHAPES[shape_name]
+    ok, reason = shp.cell_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "SKIPPED", "reason": reason}
+
+    batch_structs = shp.input_specs(cfg, shape)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    with dctx.mesh_context(mesh):
+        if shape.step == "train":
+            optimizer = build_optimizer(cfg)
+            step_fn = steps.build_train_step(cfg, optimizer)
+            st_specs = steps.state_specs(cfg, mesh, optimizer)
+            b_specs = shd.batch_specs(cfg, mesh, batch_structs)
+            st_shapes = steps.state_shape(cfg, optimizer)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(_named(mesh, st_specs),
+                                           _named(mesh, b_specs)),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(st_shapes, batch_structs)
+        elif shape.step == "prefill":
+            step_fn = serve.build_prefill_step(cfg)
+            p_shapes = jax.eval_shape(
+                lambda k: transformer.init_params(k, cfg),
+                jax.random.PRNGKey(0))
+            p_specs = shd.param_specs(cfg, mesh, p_shapes)
+            b_specs = shd.batch_specs(cfg, mesh, batch_structs)
+            jitted = jax.jit(step_fn, in_shardings=(_named(mesh, p_specs),
+                                                    _named(mesh, b_specs)))
+            lowered = jitted.lower(p_shapes, batch_structs)
+        else:  # decode
+            step_fn = serve.build_decode_step(cfg)
+            p_shapes = jax.eval_shape(
+                lambda k: transformer.init_params(k, cfg),
+                jax.random.PRNGKey(0))
+            p_specs = shd.param_specs(cfg, mesh, p_shapes)
+            cache_shapes = jax.eval_shape(
+                lambda: transformer.init_cache(cfg, shape.global_batch,
+                                               shape.seq_len))
+            c_specs = shd.cache_specs(cfg, mesh, cache_shapes)
+            tok = list(batch_structs.values())[0]
+            tok_spec = shd.batch_specs(cfg, mesh, {"t": tok})["t"]
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(_named(mesh, p_specs), _named(mesh, c_specs),
+                              jax.sharding.NamedSharding(mesh, tok_spec),
+                              None),
+                donate_argnums=(1,))
+            lowered = jitted.lower(p_shapes, cache_shapes, tok,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        lower_s = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t1
+
+    mf = roofline.model_flops_for(cfg, shape, active_param_count(cfg))
+    hlo_text = compiled.as_text()
+    if dump_hlo:
+        import gzip
+        with gzip.open(dump_hlo, "wt") as f:
+            f.write(hlo_text)
+    rl = roofline.analyze(compiled, hlo_text, arch=arch,
+                          shape=shape_name, mesh_name=mesh_name, chips=chips,
+                          model_flops=mf)
+    mem = compiled.memory_analysis()
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "OK", "chips": chips,
+        "lower_s": round(lower_s, 1), "compile_s": round(compile_s, 1),
+        "hlo_flops": rl.hlo_flops, "hlo_bytes": rl.hlo_bytes,
+        "coll_bytes_per_chip": rl.coll_bytes_per_chip,
+        "coll_breakdown": rl.coll_breakdown,
+        "model_flops": rl.model_flops,
+        "t_compute": rl.t_compute, "t_memory": rl.t_memory,
+        "t_collective": rl.t_collective, "bottleneck": rl.bottleneck,
+        "useful_flops_ratio": rl.useful_flops_ratio,
+        "roofline_fraction": rl.roofline_fraction,
+        "bytes_per_chip": {
+            "argument": mem.argument_size_in_bytes / chips,
+            "output": mem.output_size_in_bytes / chips,
+            "temp": mem.temp_size_in_bytes / chips,
+            "alias": mem.alias_size_in_bytes / chips,
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--quant", default=None, help="e.g. 'binary'")
+    ap.add_argument("--width-mult", type=float, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--dump-hlo", action="store_true",
+                    help="save gzipped optimized HLO per cell (for profiling)")
+    ap.add_argument("--rwkv-chunk", type=int, default=None,
+                    help="GLA-style chunked WKV (perf knob)")
+    ap.add_argument("--rwkv-unroll", type=int, default=None,
+                    help="unroll factor for the per-token WKV scan")
+    ap.add_argument("--mamba-unroll", type=int, default=None,
+                    help="unroll factor for the selective-scan recurrence")
+    ap.add_argument("--moe-fp8-dispatch", action="store_true",
+                    help="fp8 dispatch a2a for EP MoE (perf knob)")
+    ap.add_argument("--attn-probs-bf16", action="store_true",
+                    help="bf16 attention probabilities (perf knob)")
+    ap.add_argument("--bf16-grads", action="store_true",
+                    help="Megatron-style bf16 grad collectives (perf knob)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shape_names = list(shp.SHAPES) if args.shape == "all" else [args.shape]
+    mesh_names = {"pod": ["pod"], "multipod": ["multipod"],
+                  "both": ["pod", "multipod"]}[args.mesh]
+    overrides = {}
+    if args.quant:
+        overrides["quant"] = args.quant
+    if args.width_mult:
+        overrides["width_mult"] = args.width_mult
+    if args.rwkv_chunk:
+        overrides["rwkv_chunk"] = args.rwkv_chunk
+    if args.rwkv_unroll:
+        overrides["rwkv_scan_unroll"] = args.rwkv_unroll
+    if args.mamba_unroll:
+        overrides["mamba_scan_unroll"] = args.mamba_unroll
+    if args.moe_fp8_dispatch:
+        overrides["moe_dispatch_fp8"] = True
+    if args.attn_probs_bf16:
+        overrides["attn_probs_bf16"] = True
+    if args.bf16_grads:
+        overrides["bf16_grads"] = True
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {}
+    for mn in mesh_names:
+        meshes[mn] = mesh_lib.make_production_mesh(multi_pod=(mn == "multipod"))
+
+    results = []
+    for arch in archs:
+        for sn in shape_names:
+            for mn in mesh_names:
+                cell_id = f"{arch}__{sn}__{mn}{args.tag}"
+                path = os.path.join(args.out, f"dryrun_{cell_id}.json")
+                hlo_path = (os.path.join(args.out, f"hlo_{cell_id}.txt.gz")
+                            if args.dump_hlo else None)
+                try:
+                    res = lower_cell(arch, sn, meshes[mn], mn, overrides,
+                                     dump_hlo=hlo_path)
+                except Exception as e:  # a failing cell is a bug: record it
+                    res = {"arch": arch, "shape": sn, "mesh": mn,
+                           "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                results.append(res)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                line = (f"[{res['status']:7s}] {arch:18s} {sn:12s} {mn:8s}"
+                        + (f" dom={res.get('bottleneck','-'):10s}"
+                           f" roofline={res.get('roofline_fraction', 0):.2%}"
+                           f" compile={res.get('compile_s', 0):.0f}s"
+                           if res["status"] == "OK" else
+                           f" {res.get('reason', res.get('error', ''))[:90]}"))
+                print(line, flush=True)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n{len(results)} cells: "
+          f"{sum(r['status']=='OK' for r in results)} ok, "
+          f"{sum(r['status']=='SKIPPED' for r in results)} skipped, "
+          f"{n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

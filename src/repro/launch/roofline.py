@@ -1,0 +1,159 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs            / (chips * 197e12 FLOP/s bf16)
+  memory     = HLO_bytes_accessed   / (chips * 819e9  B/s HBM)
+  collective = sum(per-collective bytes / (chips * links_used * 50e9 B/s))
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (jax reports per-PARTITION shapes under SPMD, so
+sizes are per-chip already).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# --- hardware constants (TPU v5e-like, per chip) ----------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link; chips have multiple links but a
+                             # collective is bottlenecked by its slowest hop,
+                             # we charge 1 link per collective conservatively.
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match "  <shape> <name> = <shape> op-name(...)" instruction lines
+        m = re.match(r"^(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"([\w\-]+)", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-"):
+                # exclude *-start/done duplicates: count only -start or bare
+                if op.endswith("-done"):
+                    break
+                out[kind] += _shape_bytes(shape_str)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # whole-program (all chips)
+    hlo_bytes: float            # whole-program bytes accessed
+    coll_bytes_per_chip: float  # per chip
+    coll_breakdown: Dict[str, int]
+    model_flops: float          # 6 * N_active * D tokens (train) etc.
+    bytes_per_chip_peak: float  # memory_analysis peak
+    compile_ok: bool = True
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful FLOPs / (chips * peak * max-term)  — the MFU bound."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> str:
+        return (f"{self.arch:18s} {self.shape:12s} {self.mesh:9s} "
+                f"tc={self.t_compute:9.4f}s tm={self.t_memory:9.4f}s "
+                f"tx={self.t_collective:9.4f}s  dom={self.bottleneck:10s} "
+                f"useful={self.useful_flops_ratio:6.2%} "
+                f"roofline={self.roofline_fraction:6.2%}")
+
+
+def analyze(compiled, lowered_text: str, *, arch: str, shape: str,
+            mesh_name: str, chips: int, model_flops: float) -> Roofline:
+    """Roofline terms from trip-count-aware HLO text analysis.
+
+    ``compiled.cost_analysis()`` counts every while-loop body ONCE, so a
+    61-layer ``lax.scan`` under-reports flops 61x (verified empirically).
+    ``hlo_cost.analyze_text`` re-derives flops / bytes / collective wire
+    bytes scaling loop bodies by their ``known_trip_count``.  All numbers
+    it returns are per-partition == per-chip under SPMD.
+    """
+    from repro.launch import hlo_cost
+    mc = hlo_cost.analyze_text(lowered_text, n_chips=chips)
+    # whole-program totals (roofline divides by chips again)
+    flops = mc.flops * chips
+    byts = mc.bytes * chips
+    coll = {k: int(v) for k, v in mc.coll_breakdown.items()}
+    mem = compiled.memory_analysis()
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes + mem.generated_code_size_in_bytes)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        coll_bytes_per_chip=float(mc.coll_wire_bytes),
+        coll_breakdown=coll, model_flops=model_flops,
+        bytes_per_chip_peak=float(peak))
+
+
+def model_flops_for(cfg, shape, n_active_params: int) -> float:
+    """6*N*D for train, 2*N*D for inference steps (per whole step)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.step != "decode" else 1)
+    mult = 6.0 if shape.step == "train" else 2.0
+    return mult * n_active_params * tokens

@@ -1,0 +1,112 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+The production entry point tying the whole substrate together: arch
+registry -> mesh -> sharded train state -> deterministic data -> jitted
+step -> async checkpointing with restart-on-relaunch.  On this CPU
+container it is exercised with ``--scaled`` (the reduced same-family
+configs); on a real pod the same flags drive the full configs
+(the dry-run proves every full (arch x shape) compiles on the
+production meshes).
+
+Fault tolerance: checkpoints are written asynchronously every
+``--ckpt-every`` steps; relaunching with the same ``--ckpt-dir`` resumes
+from the latest step (data order is a pure function of step, so the
+stream realigns exactly).  SIGTERM (preemption) triggers a final
+synchronous save.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import sys
+import time
+
+import jax
+
+from repro.checkpoint import ckpt
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data import tokens as dtok
+from repro.optim import optimizers as opt
+from repro.train import steps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--scaled", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--quant", default=None, help="binary = paper technique")
+    ap.add_argument("--width-mult", type=float, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.scaled:
+        cfg = cfg.scaled()
+    over = {}
+    if args.quant:
+        over["quant"] = args.quant
+    if args.width_mult:
+        over["width_mult"] = args.width_mult
+    if args.scaled:
+        over.update(dtype="float32", param_dtype="float32", loss_chunk=64)
+    if over:
+        cfg = cfg.with_(**over)
+
+    optimizer = opt.make(cfg.optimizer,
+                         opt.cosine_schedule(args.lr, warmup=20,
+                                             total=args.steps))
+    start = 0
+    state = steps.create_state(cfg, jax.random.PRNGKey(0), optimizer)
+    writer = None
+    if args.ckpt_dir:
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        latest = ckpt.latest_step(args.ckpt_dir)
+        if latest is not None:
+            state = ckpt.restore(os.path.join(args.ckpt_dir,
+                                              f"ckpt_{latest}"), state)
+            start = latest
+            print(f"resumed from step {latest}")
+        writer = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
+
+    stop = {"now": False}
+    signal.signal(signal.SIGTERM, lambda *a: stop.update(now=True))
+
+    train_step = jax.jit(steps.build_train_step(cfg, optimizer),
+                         donate_argnums=0)
+    batch_fn = (dtok.vlm_batch_for_step if not cfg.embed_inputs
+                else dtok.batch_for_step)
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = batch_fn(cfg, i, global_batch=args.global_batch,
+                         seq_len=args.seq_len)
+        state, metrics = train_step(state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            tok_s = args.global_batch * args.seq_len * args.log_every / max(dt, 1e-9)
+            print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"tok/s {tok_s:,.0f}", flush=True)
+            t0 = time.time()
+        if writer and ((i + 1) % args.ckpt_every == 0 or stop["now"]):
+            writer.save(state, i + 1)
+        if stop["now"]:
+            writer and writer.wait()
+            print(f"preempted at step {i + 1}; checkpoint saved")
+            sys.exit(0)
+    if writer:
+        writer.save(state, args.steps)
+        writer.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""GQA attention: chunked (flash-style) causal/sliding attention + decode.
+
+Prefill/train uses an online-softmax over KV chunks with a *static* chunk
+schedule: query chunk ``i`` only visits the KV chunks its causal/window
+horizon allows, so the compiled HLO does no masked-out matmul work (this is
+what keeps the compute roofline term honest at 32k).
+
+Decode attends a single new query against the cache (no chunking needed —
+the score tensor is (B, H, S) only).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import common
+
+NEG_INF = -2.3819763e38  # bf16-safe large negative
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init(key, cfg, dtype=jnp.float32):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.linear_init(ks[0], d, h * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": common.linear_init(ks[1], d, kv * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": common.linear_init(ks[2], d, kv * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": common.linear_init(ks[3], h * dh, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = common.rmsnorm_init(dh, dtype)
+        p["k_norm"] = common.rmsnorm_init(dh, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core chunked attention
+# ---------------------------------------------------------------------------
+
+def _attend_chunk(q, k, v, softcap, scale, *, q0=0, k0=0, causal=False,
+                  window=None, k_valid=None, score_dtype=jnp.float32):
+    """q: (B,cq,H,D) k/v: (B,ck,KH,D) -> scores (B,cq,KH,G,ck).
+
+    Masks are built from broadcasted iotas fused into the select — a
+    materialized (cq,ck) pred array would otherwise be hoisted into the
+    layer-scan carry and charged S^2 bytes per layer (seen in the smollm
+    §Perf profile).
+
+    ``score_dtype=bf16`` keeps the whole S^2-sized chain (scores, exp'd
+    probs and their autodiff mirrors) in bf16 — the dominant memory-
+    roofline term at 4k+.  Softmax is still max-subtracted, so bf16's
+    8-bit mantissa only quantizes the probabilities (~fp8-attention
+    numerics; validated in tests/test_attention.py)."""
+    b, cq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, cq, kh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k,
+                   preferred_element_type=score_dtype) * jnp.asarray(
+                       scale, score_dtype)
+    # NOTE: score_dtype=bf16 measured WORSE on the XLA-CPU lowering (extra
+    # convert materialization at fusion boundaries) — kept for the TPU
+    # path experiments; default f32.
+    if softcap is not None:
+        s = common.softcap(s, softcap)
+    if causal or window is not None or k_valid is not None:
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + q0
+        ki = jax.lax.broadcasted_iota(jnp.int32, s.shape, 4) + k0
+        ok = None
+        if causal:
+            ok = ki <= qi
+        if window is not None:
+            w_ok = ki > qi - window
+            ok = w_ok if ok is None else ok & w_ok
+        if k_valid is not None:
+            v_ok = ki < k_valid
+            ok = v_ok if ok is None else ok & v_ok
+        s = jnp.where(ok, s, NEG_INF)
+    return s  # (B, cq, KH, G, ck)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      chunk_q: int = 1024, chunk_k: int = 1024,
+                      scale: Optional[float] = None,
+                      probs_bf16: bool = False):
+    """q: (B,S,H,D), k/v: (B,S,KH,D) -> (B,S,H,D).  Causal within the same
+    sequence (q and k aligned at position 0).
+
+    ``probs_bf16`` stores the exp'd probabilities in bf16 for the p@v
+    matmul (running max/denominator stay f32) — halves the S^2 HBM term,
+    the dominant memory-roofline cost at 4k+ (§Perf)."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    cq = min(chunk_q, s)
+    ck = min(chunk_k, s)
+    # pad S to chunk multiples
+    sp = (-s) % cq
+    if sp:
+        q = jnp.pad(q, ((0, 0), (0, sp), (0, 0), (0, 0)))
+    skp = (-k.shape[1]) % ck
+    if skp:
+        k = jnp.pad(k, ((0, 0), (0, skp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skp), (0, 0), (0, 0)))
+    nq, nk = q.shape[1] // cq, k.shape[1] // ck
+    g = h // kh
+
+    outs = []
+    for i in range(nq):
+        qi = q[:, i * cq:(i + 1) * cq]
+        q_lo, q_hi = i * cq, i * cq + cq - 1
+        # static KV chunk range this query chunk can see
+        j_hi = min(nk - 1, q_hi // ck) if causal else nk - 1
+        j_lo = 0
+        if window is not None:
+            j_lo = max(0, (q_lo - window) // ck)
+        acc = jnp.zeros((b, cq, kh, g, d), jnp.float32)
+        m = jnp.full((b, cq, kh, g), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, cq, kh, g), jnp.float32)
+        for j in range(j_lo, j_hi + 1):
+            kj = k[:, j * ck:(j + 1) * ck]
+            vj = v[:, j * ck:(j + 1) * ck]
+            need_mask = (causal and j * ck + ck - 1 > q_lo) or \
+                        (window is not None and j * ck < q_lo - window + cq) or \
+                        (sp and i == nq - 1) or (skp and j == nk - 1)
+            sc = _attend_chunk(
+                qi, kj, vj, softcap, scale, q0=q_lo, k0=j * ck,
+                causal=causal and need_mask,
+                window=window if need_mask else None,
+                k_valid=(k.shape[1] - skp) if (need_mask and skp
+                                               and j == nk - 1) else None)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            if probs_bf16:
+                # measured-best variant (§Perf): probs cast to bf16 for the
+                # p@v matmul only.  An all-bf16 score chain measured WORSE
+                # on the XLA-CPU lowering (extra convert materialization);
+                # the full fix is the Pallas flash kernel (TPU path).
+                pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(jnp.bfloat16),
+                                vj.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32)
+            else:
+                pv = jnp.einsum("bqhgk,bkhd->bqhgd", p,
+                                vj.astype(jnp.float32))
+            acc = acc * alpha[..., None] + pv
+            l = l * alpha + p.sum(axis=-1)
+            m = m_new
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        outs.append(out.reshape(b, cq, h, d))
+    out = jnp.concatenate(outs, axis=1)[:, :s]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     scale: Optional[float] = None):
+    """q: (B,1,H,D); caches: (B,L,KH,D); cache_len: scalar count of valid
+    positions INCLUDING the token at cache_len-1 (the one just written)."""
+    b, _, h, d = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, kh, g, d)
+    # split-K decode: cache is sequence-sharded over the model axis; scores
+    # stay L-sharded, softmax/psum handled by SPMD (FlashDecoding layout).
+    s = jnp.einsum("bhgd,blhd->bhgl", qg, k_cache).astype(jnp.float32) * scale
+    s = shd.constrain(s, ("dp", None, None, "sp"))
+    if softcap is not None:
+        s = common.softcap(s, softcap)
+    lpos = jnp.arange(k_cache.shape[1])
+    mask = lpos < cache_len
+    if window is not None:
+        mask &= lpos > cache_len - 1 - window
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full block-level apply
+# ---------------------------------------------------------------------------
+
+def apply(params, cfg, x, cos, sin, *, kind: str = "attn",
+          mode: str = "train", cache=None, cache_len=None,
+          chunk_q: int = 1024, chunk_k: int = 1024):
+    """Returns (y, new_kv) — new_kv is (k, v) for cache building/updating."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    quant = cfg.quant
+    bfg = cfg.bf16_grads
+    q = common.linear_apply(params["wq"], x, quant=quant,
+                            bf16_grads=bfg).reshape(b, s, h, dh)
+    k = common.linear_apply(params["wk"], x, quant=quant,
+                            bf16_grads=bfg).reshape(b, s, kv, dh)
+    v = common.linear_apply(params["wv"], x, quant=quant,
+                            bf16_grads=bfg).reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = common.rmsnorm_apply(params["q_norm"], q, cfg.norm_eps)
+        k = common.rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+    q = common.apply_rope(q, cos, sin)
+    k = common.apply_rope(k, cos, sin)
+
+    window = cfg.sliding_window if kind == "local" else None
+    if mode in ("train", "prefill"):
+        y = chunked_attention(q, k, v, causal=True, window=window,
+                              softcap=cfg.attn_softcap,
+                              chunk_q=chunk_q, chunk_k=chunk_k,
+                              probs_bf16=cfg.attn_probs_bf16)
+        if mode == "prefill":  # cache leaves are sequence-sharded
+            k = shd.constrain(k, ("dp", "sp", None, None))
+            v = shd.constrain(v, ("dp", "sp", None, None))
+        new_kv = (k, v)
+    else:  # decode: write (k, v) at cache_len-? position = cache_len
+        kc, vc = cache
+        idx = cache_len  # position of the new token
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, idx, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, idx, 0, 0))
+        kc = shd.constrain(kc, ("dp", "sp", None, None))
+        vc = shd.constrain(vc, ("dp", "sp", None, None))
+        y = decode_attention(q, kc, vc, idx + 1, window=window,
+                             softcap=cfg.attn_softcap)
+        new_kv = (kc, vc)
+    y = y.reshape(b, s, h * dh)
+    return common.linear_apply(params["wo"], y, quant=quant,
+                               bf16_grads=bfg), new_kv

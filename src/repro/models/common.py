@@ -1,0 +1,169 @@
+"""Shared model components: norms, RoPE (+M-RoPE), projections, embeddings.
+
+All modules are functional: ``*_init`` returns a param pytree, ``*_apply``
+consumes it.  Projections honor ``quant="binary"`` (the paper's technique,
+STE fake-quant in the differentiable path) so any architecture can be
+binarized by config.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as _np
+
+from repro.core import binarize
+
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}   # gemma-style (1 + scale)
+
+
+def rmsnorm_apply(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Linear (optionally binary)
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32):
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) / jnp.sqrt(d_in)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+@jax.custom_vjp
+def _matmul_bf16_grads(x, w):
+    return jnp.einsum("...k,kn->...n", x, w)
+
+
+def _mm_bf16_fwd(x, w):
+    return _matmul_bf16_grads(x, w), (x, w)
+
+
+def _mm_bf16_bwd(res, g):
+    """Backward with the cotangent forced to bf16 BEFORE the grad matmuls.
+
+    XLA's allow_excess_precision (default on CPU and TPU) elides
+    f32->bf16->f32 convert pairs, so without this the entire activation-
+    gradient stream — including every TP all-reduce and FSDP
+    reduce-scatter on it — runs in f32: 2x the wire bytes and 2x the HBM
+    traffic of the bwd pass (measured, EXPERIMENTS.md §Perf).  Casting at
+    a dot-input boundary is safe from elision (XLA never changes dot
+    operand dtypes); this is Megatron-style bf16 grad collectives.  dw is
+    accumulated back to f32 inside the optimizer update."""
+    x, w = res
+    g16 = g.astype(jnp.bfloat16)
+    dx = jnp.einsum("...n,kn->...k", g16, w.astype(jnp.bfloat16))
+    # contract leading dims via dot_general WITHOUT reshape — a reshape of
+    # the sharded (B,S,d) activation forces an SPMD re-gather (measured:
+    # +249 GB all-gather on kimi; the refuted first attempt in §Perf).
+    lead = tuple(range(x.ndim - 1))
+    dw = jax.lax.dot_general(x.astype(jnp.bfloat16), g16,
+                             ((lead, lead), ((), ())))
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_matmul_bf16_grads.defvjp(_mm_bf16_fwd, _mm_bf16_bwd)
+
+
+def linear_apply(params, x: jax.Array, *, quant: str = "none",
+                 bf16_grads: bool = False) -> jax.Array:
+    w = params["w"]
+    if quant == "binary":
+        # BinaryNet W1A1 with STE; 1/sqrt(K) keeps activations in range so the
+        # surrounding norms play the chip's BN-comparator role.
+        xb = binarize.ste_sign(x)
+        wb = binarize.ste_sign(w)
+        y = jnp.einsum("...k,kn->...n", xb, wb) * (1.0 / jnp.sqrt(x.shape[-1]))
+        y = y.astype(x.dtype)
+    elif bf16_grads:
+        y = _matmul_bf16_grads(x, w.astype(x.dtype))
+    else:
+        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (..., S) int -> cos/sin (..., S, head_dim//2)."""
+    freqs = rope_freqs(head_dim, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                  sections) -> tuple:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (B, S, 3) — temporal/height/width position ids.  The head_dim/2
+    frequency slots are split into `sections` (t, h, w); each section rotates
+    by its own position stream.  Text tokens carry t == h == w, reducing to
+    1-D RoPE exactly.
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = rope_freqs(head_dim, theta)                    # (hd/2,)
+    ang_3 = positions[..., None, :].astype(jnp.float32) * freqs[None, None, :, None]
+    # ang_3: (B, S, hd/2, 3) -> pick section owner per frequency slot
+    # (static section layout -> host-side repeat)
+    sec_id = jnp.asarray(_np.repeat(_np.arange(3), _np.asarray(sections)))
+    ang = jnp.take_along_axis(
+        ang_3, sec_id[None, None, :, None], axis=-1)[..., 0]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) -> rotated x (rotate-half form)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed_apply(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]

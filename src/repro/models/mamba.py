@@ -1,0 +1,115 @@
+"""Mamba (S6) block for the Jamba hybrid — selective state-space mixer.
+
+Projections/conv are computed for the whole sequence in parallel; only the
+(B, d_inner, d_state) recurrence runs under ``lax.scan``.  The per-step
+state is tiny, so the scan is memory-light even at 500k tokens — this is
+what makes the hybrid's `long_500k` shape feasible where full attention is
+not.  Decode carries (conv_state, ssm_state) explicitly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def _dims(cfg):
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, mc.d_state, mc.d_conv
+
+
+def init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di, dtr, ds, dc = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": common.linear_init(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (dc, di), dtype) / jnp.sqrt(dc),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": common.linear_init(ks[2], di, dtr + 2 * ds, dtype=dtype),
+        "dt_proj": {"w": jax.random.normal(ks[3], (dtr, di), dtype) / jnp.sqrt(dtr),
+                    "b": jnp.log(jnp.expm1(0.01)) * jnp.ones((di,), dtype)},
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": common.linear_init(ks[4], di, d, dtype=dtype),
+        "dt_norm": common.rmsnorm_init(dtr, dtype),   # Jamba's extra norms
+        "b_norm": common.rmsnorm_init(ds, dtype),
+        "c_norm": common.rmsnorm_init(ds, dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B,S,di); w: (dc,di) depthwise causal. state: (B,dc-1,di) or None."""
+    dc = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(dc))
+    new_state = xp[:, -(dc - 1):, :] if dc > 1 else None
+    return out + b, new_state
+
+
+def _ssm_inputs(params, cfg, xc):
+    """Shared projections: xc (B,S,di) -> dt (B,S,di), B/C (B,S,ds)."""
+    di, dtr, ds, _ = _dims(cfg)
+    proj = common.linear_apply(params["x_proj"], xc, quant=cfg.quant, bf16_grads=cfg.bf16_grads)
+    dt, Bm, Cm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = common.rmsnorm_apply(params["dt_norm"], dt, cfg.norm_eps)
+    Bm = common.rmsnorm_apply(params["b_norm"], Bm, cfg.norm_eps)
+    Cm = common.rmsnorm_apply(params["c_norm"], Cm, cfg.norm_eps)
+    dt = jnp.einsum("...r,rd->...d", dt, params["dt_proj"]["w"].astype(dt.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_proj"]["b"].astype(jnp.float32))
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def apply(params, cfg, x, *, mode="train", state=None):
+    """x: (B,S,d_model). Returns (y, new_state); state = (conv, ssm)."""
+    b, s, d = x.shape
+    di, dtr, ds, dc = _dims(cfg)
+    xz = common.linear_apply(params["in_proj"], x, quant=cfg.quant, bf16_grads=cfg.bf16_grads)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state[0] if state is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_w"].astype(x.dtype),
+                                params["conv_b"].astype(x.dtype), conv_state)
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_inputs(params, cfg, xc)
+    A = -jnp.exp(params["A_log"])                       # (di, ds)
+    xf = xc.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                           # (B,di),(B,di),(B,ds),(B,ds)
+        dA = jnp.exp(dtt[:, :, None] * A[None])         # (B,di,ds)
+        dBx = (dtt * xt)[:, :, None] * bt[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    h0 = state[1] if state is not None else jnp.zeros((b, di, ds), jnp.float32)
+    if s == 1 and mode == "decode":
+        h, y = step(h0, (xf[:, 0], dt[:, 0], Bm[:, 0], Cm[:, 0]))
+        y = y[:, None]
+    else:
+        h, ys = jax.lax.scan(
+            step, h0,
+            (xf.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+             Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)),
+            unroll=cfg.mamba.scan_unroll)
+        y = ys.transpose(1, 0, 2)
+    y = y + xf * params["D"][None, None, :]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = common.linear_apply(params["out_proj"], y, quant=cfg.quant, bf16_grads=cfg.bf16_grads)
+    new_state = (new_conv, h)
+    return out, new_state
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32):
+    di, dtr, ds, dc = _dims(cfg)
+    return (jnp.zeros((batch, dc - 1, di), dtype),
+            jnp.zeros((batch, di, ds), jnp.float32))

@@ -1,0 +1,25 @@
+"""Gated MLP (SwiGLU/GeGLU) with optional BinaryNet quantization."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": common.linear_init(k1, d_model, d_ff, dtype=dtype),
+        "wg": common.linear_init(k2, d_model, d_ff, dtype=dtype),
+        "wo": common.linear_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def apply(params, x: jax.Array, *, act: str = "silu", quant: str = "none",
+          bf16_grads: bool = False) -> jax.Array:
+    h = common.linear_apply(params["wi"], x, quant=quant, bf16_grads=bf16_grads)
+    g = common.linear_apply(params["wg"], x, quant=quant, bf16_grads=bf16_grads)
+    h = common.act_fn(act)(g) * h
+    return common.linear_apply(params["wo"], h, quant=quant, bf16_grads=bf16_grads)

@@ -1,0 +1,206 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention (attn-free).
+
+Faithful structure: ddlerp token-shift (LoRA-modulated), a per-channel
+data-dependent decay w_t = exp(-exp(w0 + lora(x))), the bonus-u WKV
+recurrence with (head, hs, hs) matrix state, per-head group norm, and the
+squared-ReLU channel-mix.  The recurrence state is O(H * hs^2) per sequence
+— independent of length — which is why rwkv6 runs the `long_500k` shape.
+
+Paper-technique note (DESIGN.md §4): the decay path must stay continuous;
+`quant="binary"` binarizes only the r/k/v/g/o and channel-mix projections.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import eff_d_ff
+from repro.models import common
+
+_MIX_KEYS = ("w", "k", "v", "r", "g")
+
+
+def init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    rc = cfg.rwkv
+    hs = rc.head_size
+    nh = d // hs
+    ks = jax.random.split(key, 12)
+    u = jnp.zeros((nh, hs), jnp.float32)
+    p = {
+        # token-shift ddlerp
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu": {k: jnp.full((d,), 0.5, dtype) for k in _MIX_KEYS},
+        "mix_w1": jax.random.normal(ks[0], (d, 5 * rc.mix_lora), dtype) * 0.01,
+        "mix_w2": jax.random.normal(ks[1], (5, rc.mix_lora, d), dtype) * 0.01,
+        # data-dependent decay
+        "w0": jnp.full((d,), -5.0, jnp.float32),
+        "w1": jax.random.normal(ks[2], (d, rc.decay_lora), dtype) * 0.01,
+        "w2": jax.random.normal(ks[3], (rc.decay_lora, d), dtype) * 0.01,
+        "u": u,
+        # projections
+        "wr": common.linear_init(ks[4], d, d, dtype=dtype),
+        "wk": common.linear_init(ks[5], d, d, dtype=dtype),
+        "wv": common.linear_init(ks[6], d, d, dtype=dtype),
+        "wg": common.linear_init(ks[7], d, d, dtype=dtype),
+        "wo": common.linear_init(ks[8], d, d, dtype=dtype),
+        "ln_x": common.rmsnorm_init(d, dtype),
+        # channel mix (with its own pre-norm; block ln1 covers time-mix)
+        "ln_x2": common.rmsnorm_init(d, dtype),
+        "cm_mu_k": jnp.full((d,), 0.5, dtype),
+        "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_wk": common.linear_init(ks[9], d, eff_d_ff(cfg), dtype=dtype),
+        "cm_wv": common.linear_init(ks[10], eff_d_ff(cfg), d, dtype=dtype),
+        "cm_wr": common.linear_init(ks[11], d, d, dtype=dtype),
+    }
+    return p
+
+
+def _shifted(x, shift_state):
+    """Previous-token stream. shift_state: (B,1,d) last token of prior chunk."""
+    if shift_state is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = shift_state.astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+_LA_CLAMP = -20.0   # exp(20)=4.9e8; channels decayed below e^-20 are dead
+
+
+def _wkv_chunked(rh, kh, vh, wh, u, S0, chunk: int):
+    """GLA-style chunked WKV: identical math to the per-token scan, but the
+    (B,H,hs,hs) state round-trips HBM once per CHUNK instead of once per
+    token, and the intra-chunk part runs as (C,C) masked matmuls on the MXU.
+
+    Derivation (per channel i, decay applied to history at step t):
+        S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+        y_t = r_t . S_{t-1} + (r_t*u*k_t).sum v_t
+    With P_t = prod_{s<=t} w_s (la = cumsum log w), r~_t = r_t * P_{t-1},
+    k~_s = k_s * exp(-la_s):
+        y      = r~ @ S_in + ((r~ @ k~^T) o M_strict) @ V + bonus-diag
+        S_out  = P_last o S_in + sum_s exp(la_last - la_s) k_s (x) v_s
+    exp(-la) is clamped at exp(-_LA_CLAMP): only channels whose history has
+    decayed below e^-20 are affected (verified vs the scan oracle in
+    tests/test_rwkv_chunked.py).
+    """
+    b, s, nh, hs = rh.shape
+    n = s // chunk
+    # (n, B, H, C, hs) chunk-major layout
+    def chunked(t):
+        return t.reshape(b, n, chunk, nh, hs).transpose(1, 0, 3, 2, 4)
+    rc_, kc, vc, wc = chunked(rh), chunked(kh), chunked(vh), chunked(wh)
+
+    # wc = exp(-exp(wraw)) in (0,1); log w <= 0, floored against log(0)
+    logw = jnp.log(jnp.maximum(wc, 1e-30))                 # (n,B,H,C,hs) <= 0
+    la = jnp.cumsum(logw, axis=3)                          # cumulative decay
+    la = jnp.maximum(la, _LA_CLAMP)
+    la_prev = jnp.concatenate([jnp.zeros_like(la[..., :1, :]),
+                               la[..., :-1, :]], axis=3)   # la_{t-1}
+    r_tld = rc_ * jnp.exp(la_prev)                         # r~
+    k_tld = kc * jnp.exp(-la)                              # k~
+    k_out = kc * jnp.exp(la[..., -1:, :] - la)             # for S_out (<=1)
+    p_last = jnp.exp(la[..., -1, :])                       # (n,B,H,hs)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+
+    def body(S, inp):
+        r_t, k_t, v_t, k_o, p_l, r_raw, k_raw = inp
+        y_state = jnp.einsum("bhci,bhij->bhcj", r_t, S)
+        scores = jnp.einsum("bhci,bhsi->bhcs", r_t, k_t) * mask[None, None]
+        y_intra = jnp.einsum("bhcs,bhsj->bhcj", scores, v_t)
+        y_bonus = jnp.einsum("bhci,bhci->bhc", r_raw * u[None, :, None, :],
+                             k_raw)[..., None] * v_t
+        S = p_l[..., :, None] * S + jnp.einsum("bhci,bhcj->bhij", k_o, v_t)
+        return S, y_state + y_intra + y_bonus
+
+    S, ys = jax.lax.scan(body, S0, (r_tld, k_tld, vc, k_out, p_last,
+                                    rc_, kc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, nh, hs)  # (B,S,H,hs)
+    return S, y
+
+
+def time_mix(params, cfg, x, *, state=None, mode="train"):
+    """x: (B,S,d). state=(shift (B,1,d), wkv (B,H,hs,hs)). -> (y, state)."""
+    b, s, d = x.shape
+    rc = cfg.rwkv
+    hs = rc.head_size
+    nh = d // hs
+    shift0 = state[0] if state is not None else None
+    xs = _shifted(x, shift0)
+    dx = xs - x
+    xxx = x + dx * params["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,dm->bsm", xxx, params["mix_w1"].astype(x.dtype)))
+    lora = lora.reshape(b, s, 5, rc.mix_lora)
+    mods = jnp.einsum("bsfm,fmd->bsfd", lora, params["mix_w2"].astype(x.dtype))
+    feeds = {k: x + dx * (params["mu"][k].astype(x.dtype) + mods[:, :, i])
+             for i, k in enumerate(_MIX_KEYS)}
+
+    decay_in = jnp.tanh(jnp.einsum("bsd,dm->bsm", feeds["w"],
+                                   params["w1"].astype(x.dtype)))
+    wraw = params["w0"] + jnp.einsum("bsm,md->bsd", decay_in,
+                                     params["w2"].astype(x.dtype)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wraw))                            # (B,S,d) in (0,1)
+
+    r = common.linear_apply(params["wr"], feeds["r"], quant=cfg.quant, bf16_grads=cfg.bf16_grads)
+    k = common.linear_apply(params["wk"], feeds["k"], quant=cfg.quant, bf16_grads=cfg.bf16_grads)
+    v = common.linear_apply(params["wv"], feeds["v"], quant=cfg.quant, bf16_grads=cfg.bf16_grads)
+    g = jax.nn.silu(common.linear_apply(params["wg"], feeds["g"], quant=cfg.quant, bf16_grads=cfg.bf16_grads))
+
+    rh = r.reshape(b, s, nh, hs).astype(jnp.float32)
+    kh = k.reshape(b, s, nh, hs).astype(jnp.float32)
+    vh = v.reshape(b, s, nh, hs).astype(jnp.float32)
+    wh = w.reshape(b, s, nh, hs)
+    u = params["u"]                                        # (H, hs)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                               # (B,H,hs) each
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,hs,hs)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    S0 = (state[1] if state is not None
+          else jnp.zeros((b, nh, hs, hs), jnp.float32))
+    chunk = rc.chunk
+    if s == 1 and mode == "decode":
+        S, y = step(S0, (rh[:, 0], kh[:, 0], vh[:, 0], wh[:, 0]))
+        y = y[:, None]
+    elif chunk and s % chunk == 0:
+        S, y = _wkv_chunked(rh, kh, vh, wh, u, S0, chunk)
+    else:
+        S, ys = jax.lax.scan(
+            step, S0, (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+                       vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3)),
+            unroll=rc.scan_unroll)
+        y = ys.transpose(1, 0, 2, 3)                       # (B,S,H,hs)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = common.rmsnorm_apply(params["ln_x"], y, cfg.norm_eps) * g
+    out = common.linear_apply(params["wo"], y, quant=cfg.quant, bf16_grads=cfg.bf16_grads)
+    new_state = (x[:, -1:], S)
+    return out, new_state
+
+
+def channel_mix(params, cfg, x, *, state=None):
+    """Squared-ReLU channel mix. state: (B,1,d) shift."""
+    xs = _shifted(x, state)
+    dx = xs - x
+    xk = x + dx * params["cm_mu_k"].astype(x.dtype)
+    xr = x + dx * params["cm_mu_r"].astype(x.dtype)
+    k = common.linear_apply(params["cm_wk"], xk, quant=cfg.quant, bf16_grads=cfg.bf16_grads)
+    k = jnp.square(jax.nn.relu(k))
+    kv = common.linear_apply(params["cm_wv"], k, quant=cfg.quant, bf16_grads=cfg.bf16_grads)
+    gate = jax.nn.sigmoid(common.linear_apply(params["cm_wr"], xr, quant=cfg.quant, bf16_grads=cfg.bf16_grads))
+    return gate * kv, x[:, -1:]
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    rc = cfg.rwkv
+    nh = d // rc.head_size
+    return {
+        "tm_shift": jnp.zeros((batch, 1, d), dtype),
+        "wkv": jnp.zeros((batch, nh, rc.head_size, rc.head_size), jnp.float32),
+        "cm_shift": jnp.zeros((batch, 1, d), dtype),
+    }

@@ -1,0 +1,263 @@
+"""Model assembly: pattern-based decoder covering all 10 assigned archs.
+
+A config's layer stack is ``prefix`` (unscanned leading layers, e.g. Kimi's
+dense first layer) followed by ``pattern`` repeated R times and executed
+under ``jax.lax.scan`` over stacked parameters — one HLO block body per
+pattern position regardless of depth, which keeps 80-layer compiles cheap.
+
+Block kinds: attn | local | global | dense | attn_moe | mamba | mamba_moe
+| rwkv.  ``forward`` returns final *hidden states* (the LM head + loss are
+applied chunked in train/steps.py to bound logits memory); ``lm_logits``
+maps hidden -> logits for serving.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.models import attention, common, mamba, mlp, moe, rwkv6
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg, kind: str, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": common.rmsnorm_init(d, dtype)}
+    if kind in ("attn", "local", "global", "dense", "attn_moe"):
+        p["attn"] = attention.init(ks[0], cfg, dtype)
+    elif kind in ("mamba", "mamba_moe"):
+        p["mamba"] = mamba.init(ks[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["rwkv"] = rwkv6.init(ks[0], cfg, dtype)
+        return p  # rwkv keeps its own ln2/channel-mix internally
+    else:
+        raise ValueError(kind)
+    p["ln2"] = common.rmsnorm_init(d, dtype)
+    if kind.endswith("_moe"):
+        p["moe"] = moe.init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp.init(ks[1], d, cfgbase.eff_d_ff(cfg), dtype)
+    if cfg.post_block_norm:
+        p["ln1_post"] = common.rmsnorm_init(d, dtype)
+        p["ln2_post"] = common.rmsnorm_init(d, dtype)
+    return p
+
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 6)
+    params: Dict[str, Any] = {}
+    if cfg.embed_inputs:
+        if cfg.num_codebooks > 1:
+            tables = jax.random.normal(
+                keys[0], (cfg.num_codebooks, cfg.vocab_size, cfg.d_model),
+                dtype) * 0.02
+            params["embed"] = {"table": tables}
+        else:
+            params["embed"] = common.embed_init(keys[0], cfg.vocab_size,
+                                                cfg.d_model, dtype)
+    # prefix (unscanned)
+    if cfg.prefix:
+        pkeys = jax.random.split(keys[1], len(cfg.prefix))
+        params["prefix"] = [
+            _block_init(pkeys[i], cfg, kind, dtype)
+            for i, kind in enumerate(cfg.prefix)]
+    # scanned pattern blocks: stack R inits per position
+    r = cfg.num_pattern_repeats
+    blocks = {}
+    bkeys = jax.random.split(keys[2], len(cfg.pattern))
+    for i, kind in enumerate(cfg.pattern):
+        stack_keys = jax.random.split(bkeys[i], r)
+        blocks[f"pos{i}"] = jax.vmap(
+            lambda k: _block_init(k, cfg, kind, dtype))(stack_keys)
+    params["blocks"] = blocks
+    params["final_norm"] = common.rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            params["lm_head"] = {"w": jax.random.normal(
+                keys[3], (cfg.num_codebooks, cfg.d_model, cfg.vocab_size),
+                dtype) / jnp.sqrt(cfg.d_model)}
+        else:
+            params["lm_head"] = common.linear_init(
+                keys[3], cfg.d_model, cfg.vocab_size, dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _residual(x, y, params, which, cfg):
+    if cfg.post_block_norm:
+        y = common.rmsnorm_apply(params[f"{which}_post"], y, cfg.norm_eps)
+    return x + y
+
+
+def block_apply(params, cfg, kind, x, cos, sin, *, mode="train",
+                cache=None, cache_len=None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = common.rmsnorm_apply(params["ln1"], x, cfg.norm_eps)
+    if kind == "rwkv":
+        st = cache or {}
+        y, tm_state = rwkv6.time_mix(
+            params["rwkv"], cfg, h,
+            state=(st.get("tm_shift"), st.get("wkv")) if cache else None,
+            mode=mode)
+        x = x + y
+        h2 = common.rmsnorm_apply(params["rwkv"]["ln_x2"], x, cfg.norm_eps)
+        y2, cm_shift = rwkv6.channel_mix(params["rwkv"], cfg, h2,
+                                         state=st.get("cm_shift") if cache else None)
+        x = x + y2
+        new_cache = {"tm_shift": tm_state[0], "wkv": tm_state[1],
+                     "cm_shift": cm_shift}
+        return x, new_cache, aux
+
+    if kind in ("attn", "local", "global", "dense", "attn_moe"):
+        y, new_kv = attention.apply(params["attn"], cfg, h, cos, sin,
+                                    kind=kind, mode=mode, cache=cache,
+                                    cache_len=cache_len)
+        x = _residual(x, y, params, "ln1", cfg)
+        new_cache = new_kv
+    else:  # mamba family
+        y, new_state = mamba.apply(params["mamba"], cfg, h, mode=mode,
+                                   state=cache)
+        x = _residual(x, y, params, "ln1", cfg)
+        new_cache = new_state
+
+    h = common.rmsnorm_apply(params["ln2"], x, cfg.norm_eps)
+    if kind.endswith("_moe"):
+        y, aux = moe.apply(params["moe"], cfg, h)
+    else:
+        y = mlp.apply(params["mlp"], h, act=cfg.act, quant=cfg.quant, bf16_grads=cfg.bf16_grads)
+    x = _residual(x, y, params, "ln2", cfg)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, batch):
+    if not cfg.embed_inputs:
+        x = batch["embeds"]
+    elif cfg.num_codebooks > 1:
+        toks = batch["tokens"]                         # (B, S, ncb)
+        tbl = params["embed"]["table"]                 # (ncb, V, D)
+        x = sum(jnp.take(tbl[c], toks[..., c], axis=0)
+                for c in range(cfg.num_codebooks))
+    else:
+        x = common.embed_apply(params["embed"], batch["tokens"])
+    if getattr(cfg, "embed_scale", False):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _rope(cfg, batch, x):
+    if not any(k in ("attn", "local", "global", "dense", "attn_moe")
+               for k in cfg.prefix + cfg.pattern):
+        return None, None
+    b, s = x.shape[:2]
+    pos = batch.get("positions")
+    if cfg.mrope:
+        if pos is None:
+            p1 = jnp.broadcast_to(jnp.arange(s)[None, :, None], (b, s, 3))
+            pos = p1
+        return common.mrope_cos_sin(pos, cfg.head_dim, cfg.rope_theta,
+                                    cfg.mrope_sections)
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    return common.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+
+
+def forward(params, cfg, batch, *, mode: str = "train",
+            cache: Optional[dict] = None, cache_len=None):
+    """Returns (hidden (B,S,D), new_cache, aux_loss)."""
+    x = _embed(params, cfg, batch).astype(common.dtype_of(cfg))
+    cos, sin = _rope(cfg, batch, x)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    # --- prefix layers -----------------------------------------------------
+    new_prefix_cache = []
+    for i, kind in enumerate(cfg.prefix):
+        c = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = block_apply(params["prefix"][i], cfg, kind, x, cos, sin,
+                                 mode=mode, cache=c, cache_len=cache_len)
+        new_prefix_cache.append(nc)
+        aux_total = aux_total + aux
+
+    # --- scanned pattern ---------------------------------------------------
+    def body(carry, xs):
+        x, aux_total = carry
+        block_params, blk_cache = xs
+        new_cache = {}
+        for i, kind in enumerate(cfg.pattern):
+            c = blk_cache[f"pos{i}"] if blk_cache is not None else None
+            x, nc, aux = block_apply(block_params[f"pos{i}"], cfg, kind, x,
+                                     cos, sin, mode=mode, cache=c,
+                                     cache_len=cache_len)
+            new_cache[f"pos{i}"] = nc if mode != "train" else None
+            aux_total = aux_total + aux
+        return (x, aux_total), new_cache
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    blk_cache = cache["blocks"] if cache is not None else None
+    (x, aux_total), new_blk_cache = jax.lax.scan(
+        body, (x, aux_total), (params["blocks"], blk_cache))
+
+    x = common.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    new_cache = ({"prefix": new_prefix_cache, "blocks": new_blk_cache}
+                 if (mode != "train") else None)
+    return x, new_cache, aux_total
+
+
+def lm_logits(params, cfg, hidden):
+    """hidden (B,S,D) -> logits (B,S,V) or (B,S,ncb,V)."""
+    if cfg.num_codebooks > 1:
+        w = params["lm_head"]["w"]                     # (ncb, D, V)
+        logits = jnp.einsum("bsd,cdv->bscv", hidden, w.astype(hidden.dtype))
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", hidden,
+                            params["embed"]["table"].astype(hidden.dtype))
+    else:
+        logits = common.linear_apply(params["lm_head"], hidden)
+    if cfg.logit_softcap:
+        logits = common.softcap(logits, cfg.logit_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (decode)
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg, kind, batch: int, max_len: int, dtype):
+    if kind in ("attn", "local", "global", "dense", "attn_moe"):
+        shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if kind in ("mamba", "mamba_moe"):
+        return mamba.init_state(cfg, batch, dtype)
+    if kind == "rwkv":
+        return rwkv6.init_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    dtype = common.dtype_of(cfg)
+    prefix = [_block_cache(cfg, k, batch, max_len, dtype) for k in cfg.prefix]
+    r = cfg.num_pattern_repeats
+    blocks = {}
+    for i, kind in enumerate(cfg.pattern):
+        one = _block_cache(cfg, kind, batch, max_len, dtype)
+        blocks[f"pos{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (r,) + a.shape).copy(), one)
+    return {"prefix": prefix, "blocks": blocks}

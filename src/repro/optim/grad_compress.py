@@ -1,0 +1,62 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for cross-pod reduces).
+
+At 1000+ nodes the pod-to-pod (DCN/ICI-expander) all-reduce of bf16 grads
+dominates step time for FSDP models.  We quantize each gradient leaf to
+int8 with a per-leaf fp32 scale before the cross-pod reduce and keep the
+quantization residual in an error-feedback buffer (Seide et al. 2014;
+1-bit Adam lineage) so the bias cancels over steps.
+
+Usage (see train/steps.py): grads are reduced per-pod by pjit as usual;
+``compress``/``decompress`` wrap only the explicit cross-pod psum when
+``cross_pod_compression`` is on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array, err: jax.Array):
+    """g + err -> (q int8, scale f32, new_err). Symmetric per-tensor scale."""
+    g32 = g.astype(jnp.float32) + err
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g32 - deq
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum_tree(grads, err_state, axis_name: str):
+    """Error-feedback int8 psum over `axis_name` for every leaf.
+
+    int8 sums can overflow int8 range, so the wire format is int8 but the
+    reduction runs in int32 (XLA converts once per leaf); scales are
+    max-reduced so dequantization is conservative.
+    """
+    def one(g, err):
+        q, scale, new_err = compress(g, err)
+        scale = jax.lax.pmax(scale, axis_name)           # shared scale
+        # requantize against the shared scale to keep the wire int8
+        g32 = g.astype(jnp.float32) + err
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_err = g32 - q.astype(jnp.float32) * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return (total.astype(jnp.float32) * scale / n).astype(g.dtype), new_err
+
+    out = jax.tree.map(one, grads, err_state)
+    new_grads = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_err

@@ -1,0 +1,91 @@
+"""Serving: prefill and decode step builders with sharded caches.
+
+* ``prefill_step`` — run the full prompt, return last-position logits + a
+  cache padded to ``max_len`` (KV leaves sequence-sharded over the model
+  axis: split-K decode layout).
+* ``decode_step``  — one token for every sequence in the batch against the
+  cache; recurrent archs (mamba/rwkv) carry constant-size states instead.
+* ``sample`` — greedy / temperature sampling helper.
+
+Batched requests: the serve driver (launch/serve.py) packs requests into
+fixed batch slots; finished slots keep decoding padding into a dead slot
+until replaced (standard static-batch serving).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+
+_ATTN_KINDS = ("attn", "local", "global", "dense", "attn_moe")
+
+
+def _pad_cache_to(cfg, cache, max_len: int):
+    """Pad prefill KV (B,S,KH,D) leaves (attention blocks only) to max_len."""
+    def pad(path, leaf):
+        if leaf is None:
+            return None
+        parts = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if parts[0] == "prefix":
+            kind = cfg.prefix[int(parts[1])]
+        else:  # blocks/pos{i}/...
+            kind = cfg.pattern[int(str(parts[1])[3:])]
+        if kind not in _ATTN_KINDS:
+            return leaf
+        s_ax = leaf.ndim - 3                       # (R?, B, S, KH, D)
+        cur = leaf.shape[s_ax]
+        if cur == max_len:
+            return leaf
+        pad_widths = [(0, 0)] * leaf.ndim
+        pad_widths[s_ax] = (0, max_len - cur)
+        return jnp.pad(leaf, pad_widths)
+
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+def build_prefill_step(cfg, max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        h, cache, _ = transformer.forward(params, cfg, batch, mode="prefill")
+        logits = transformer.lm_logits(params, cfg, h[:, -1:])
+        if max_len is not None:
+            cache = _pad_cache_to(cfg, cache, max_len)
+        return logits, cache
+    return prefill_step
+
+
+def build_decode_step(cfg):
+    def decode_step(params, cache, tokens_or_embeds, cache_len):
+        """tokens: (B,1)/(B,1,ncb) (or embeds (B,1,D)); cache_len: scalar."""
+        if cfg.embed_inputs:
+            batch = {"tokens": tokens_or_embeds}
+        else:
+            batch = {"embeds": tokens_or_embeds}
+        if cfg.mrope:
+            b = tokens_or_embeds.shape[0]
+            pos = jnp.broadcast_to(cache_len[None, None, None]
+                                   if hasattr(cache_len, "shape")
+                                   else jnp.asarray(cache_len)[None, None, None],
+                                   (b, 1, 3)).astype(jnp.int32)
+            batch["positions"] = pos
+        else:
+            b = tokens_or_embeds.shape[0]
+            batch["positions"] = jnp.broadcast_to(
+                jnp.asarray(cache_len, jnp.int32)[None, None], (b, 1))
+        h, cache, _ = transformer.forward(params, cfg, batch, mode="decode",
+                                          cache=cache, cache_len=cache_len)
+        logits = transformer.lm_logits(params, cfg, h)
+        return logits, cache
+    return decode_step
+
+
+def sample(key, logits, temperature: float = 0.0):
+    """logits (B,1,V) or (B,1,ncb,V) -> token ids."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,143 @@
+"""Step builders: train / eval, with chunked cross-entropy and sharding.
+
+The LM head + softmax is the peak-memory site at large vocab (163k for
+Kimi): ``chunked_ce`` scans the sequence in ``cfg.loss_chunk`` slices with
+rematerialization, bounding logits memory to B x chunk x V while keeping
+the same gradients.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context as dctx, sharding as shd
+from repro.models import transformer
+from repro.optim import optimizers as opt
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def _ce_chunk(params, cfg, h_chunk, labels_chunk):
+    logits = transformer.lm_logits(params, cfg, h_chunk).astype(jnp.float32)
+    logits = shd.constrain(
+        logits, ("dp",) + (None,) * (logits.ndim - 2) + ("tp",))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_chunk[..., None],
+                               axis=-1)[..., 0]
+    return jnp.sum(lse - gold), labels_chunk.size
+
+
+def chunked_ce(params, cfg, h, labels):
+    """h: (B,S,D); labels: (B,S) or (B,S,ncb). Mean CE over all tokens."""
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    if s % c:
+        c = s  # fallback: single chunk
+    n = s // c
+    hc = h.reshape(b, n, c, d).swapaxes(0, 1)                  # (n,B,c,D)
+    lc = labels.reshape((b, n, c) + labels.shape[2:]).swapaxes(0, 1)
+
+    def body(carry, xs):
+        hx, lx = xs
+        tot, cnt = jax.checkpoint(
+            functools.partial(_ce_chunk, params, cfg))(hx, lx)
+        return (carry[0] + tot, carry[1] + cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), 0), (hc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg):
+    def loss_fn(params, batch):
+        h, _, aux = transformer.forward(params, cfg, batch, mode="train")
+        ce = chunked_ce(params, cfg, h, batch["labels"])
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def build_train_step(cfg, optimizer: opt.Optimizer):
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"], batch)
+        new_params, new_opt, gnorm = optimizer.update(
+            grads, state["opt_state"], state["params"], state["step"])
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "grad_norm": gnorm}
+        return {"params": new_params, "opt_state": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg):
+    loss_fn = make_loss_fn(cfg)
+
+    def eval_step(params, batch):
+        loss, parts = loss_fn(params, batch)
+        return {"loss": loss, **parts}
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+def create_state(cfg, key, optimizer: opt.Optimizer):
+    params = transformer.init_params(key, cfg)
+    return {"params": params, "opt_state": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_shape(cfg, optimizer: opt.Optimizer):
+    """abstract state (ShapeDtypeStructs) without allocating anything."""
+    return jax.eval_shape(lambda k: create_state(cfg, k, optimizer),
+                          jax.random.PRNGKey(0))
+
+
+def state_specs(cfg, mesh, optimizer: opt.Optimizer):
+    """PartitionSpecs for the full train state.
+
+    Optimizer leaves mirror their parameter's spec exactly; adafactor's
+    factored vectors inherit the surviving dims' axes ("vr" drops the last
+    dim, "vc" drops the second-to-last).
+    """
+    P = jax.sharding.PartitionSpec
+    shapes = state_shape(cfg, optimizer)
+    pspecs = shd.param_specs(cfg, mesh, shapes["params"])
+    by_path = {shd._path_str(path): spec for path, spec in
+               jax.tree_util.tree_flatten_with_path(
+                   pspecs, is_leaf=lambda x: isinstance(x, P))[0]}
+
+    def opt_spec(path, leaf):
+        parts = shd._path_str(path).split("/")
+        tail = None
+        if parts and parts[-1] in ("vr", "vc", "v"):
+            tail = parts[-1]
+        core = parts[1:-1] if tail else parts[1:]   # strip leading m|v dict key
+        ref = by_path.get("/".join(core))
+        if ref is None and tail is None:
+            ref = by_path.get("/".join(parts[1:]))
+            tail = None
+        if ref is None:
+            return P(*([None] * len(leaf.shape)))
+        if tail == "vr":
+            return P(*ref[:-1])
+        if tail == "vc":
+            return P(*ref[:-2], ref[-1])
+        return ref
+
+    ospecs = jax.tree_util.tree_map_with_path(opt_spec, shapes["opt_state"])
+    return {"params": pspecs, "opt_state": ospecs, "step": P()}

@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward + one train step on CPU, asserting output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import active_param_count, param_count
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data import tokens as dtok
+from repro.models import transformer
+from repro.optim import optimizers as opt
+from repro.train import steps
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    if not cfg.embed_inputs:
+        b = dtok.vlm_batch_for_step(cfg, 0, global_batch=B, seq_len=S)
+    else:
+        b = dtok.batch_for_step(cfg, 0, global_batch=B, seq_len=S)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).scaled().with_(dtype="float32",
+                                          param_dtype="float32",
+                                          loss_chunk=16)
+    key = jax.random.PRNGKey(0)
+    batch = _batch(cfg, key)
+
+    # forward
+    params = transformer.init_params(key, cfg)
+    h, _, aux = transformer.forward(params, cfg, batch, mode="train")
+    assert h.shape == (B, S, cfg.d_model)
+    logits = transformer.lm_logits(params, cfg, h)
+    if cfg.num_codebooks > 1:
+        assert logits.shape == (B, S, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    # one full train step
+    optimizer = opt.make(cfg.optimizer, opt.cosine_schedule(1e-3, 10, 100))
+    state = steps.create_state(cfg, key, optimizer)
+    train_step = jax.jit(steps.build_train_step(cfg, optimizer))
+    state, metrics = train_step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0.0
+    assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "olmoe-1b-7b", "rwkv6-3b"])
+def test_smoke_binary_variant(arch):
+    """The paper's technique as a config flag on LM archs."""
+    cfg = get_config(arch, quant="binary").scaled().with_(
+        dtype="float32", param_dtype="float32", loss_chunk=16,
+        quant="binary")
+    key = jax.random.PRNGKey(1)
+    params = transformer.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    h, _, _ = transformer.forward(params, cfg, batch, mode="train")
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("wm", [1.0, 0.5, 0.25])
+def test_width_mult_s_knob(wm):
+    """BinarEye S-knob generalization: width_mult scales FFN params ~linearly."""
+    cfg = get_config("smollm-360m").with_(width_mult=wm)
+    n = param_count(cfg)
+    base = param_count(get_config("smollm-360m"))
+    if wm < 1.0:
+        assert n < base
+    key = jax.random.PRNGKey(0)
+    small = cfg.scaled().with_(dtype="float32", param_dtype="float32",
+                               width_mult=wm)
+    params = transformer.init_params(key, small)
+    h, _, _ = transformer.forward(params, small,
+                                  dtok.batch_for_step(small, 0,
+                                                      global_batch=B, seq_len=S))
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_param_counts_match_published_sizes():
+    expect = {
+        "kimi-k2-1t-a32b": (1.03e12, 34e9),
+        "olmoe-1b-7b": (6.9e9, 1.3e9),
+        "qwen1.5-110b": (111e9, 111e9),
+        "jamba-v0.1-52b": (52e9, 12e9),
+        "rwkv6-3b": (3.1e9, 3.1e9),
+        "smollm-360m": (0.36e9, 0.36e9),
+    }
+    for arch, (tot, act) in expect.items():
+        cfg = get_config(arch)
+        assert abs(param_count(cfg) - tot) / tot < 0.10, arch
+        assert abs(active_param_count(cfg) - act) / act < 0.15, arch

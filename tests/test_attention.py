@@ -1,0 +1,126 @@
+"""Chunked (flash-style) attention vs naive oracle + causality properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, softcap=None):
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, d)
+    sc = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k).astype(jnp.float32) / jnp.sqrt(d)
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    sc = jnp.where(mask[None, :, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d)
+
+
+def _qkv(key, b, s, h, kh, d):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (jax.random.normal(k1, (b, s, h, d)),
+            jax.random.normal(k2, (b, s, kh, d)),
+            jax.random.normal(k3, (b, s, kh, d)))
+
+
+CASES = [
+    dict(b=2, s=17, h=4, kh=4, d=8, window=None, softcap=None, cq=8, ck=8),
+    dict(b=1, s=64, h=8, kh=2, d=16, window=None, softcap=None, cq=16, ck=16),
+    dict(b=2, s=40, h=4, kh=1, d=8, window=16, softcap=None, cq=8, ck=8),
+    dict(b=1, s=33, h=2, kh=2, d=8, window=None, softcap=10.0, cq=16, ck=8),
+    dict(b=2, s=24, h=6, kh=3, d=8, window=8, softcap=20.0, cq=8, ck=4),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_chunked_matches_naive(case):
+    q, k, v = _qkv(jax.random.PRNGKey(0), case["b"], case["s"], case["h"],
+                   case["kh"], case["d"])
+    got = attention.chunked_attention(q, k, v, causal=True,
+                                      window=case["window"],
+                                      softcap=case["softcap"],
+                                      chunk_q=case["cq"], chunk_k=case["ck"])
+    want = naive_attention(q, k, v, causal=True, window=case["window"],
+                           softcap=case["softcap"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(2, 48), cq=st.sampled_from([4, 8, 16]),
+       ck=st.sampled_from([4, 8, 16]), seed=st.integers(0, 10**6))
+def test_chunk_size_invariance(s, cq, ck, seed):
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 1, s, 2, 1, 8)
+    a = attention.chunked_attention(q, k, v, chunk_q=cq, chunk_k=ck)
+    b = attention.chunked_attention(q, k, v, chunk_q=s, chunk_k=s)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_last_position():
+    """decode_attention on a cache == last row of full chunked attention."""
+    b, s, h, kh, d = 2, 20, 4, 2, 8
+    q, k, v = _qkv(jax.random.PRNGKey(3), b, s, h, kh, d)
+    full = attention.chunked_attention(q, k, v, chunk_q=8, chunk_k=8)
+    L = 32
+    kc = jnp.zeros((b, L, kh, d)).at[:, :s].set(k)
+    vc = jnp.zeros((b, L, kh, d)).at[:, :s].set(v)
+    dec = attention.decode_attention(q[:, -1:], kc, vc, cache_len=s)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_sliding_window():
+    b, s, h, kh, d = 1, 30, 2, 1, 8
+    q, k, v = _qkv(jax.random.PRNGKey(4), b, s, h, kh, d)
+    w = 8
+    full = attention.chunked_attention(q, k, v, window=w, chunk_q=8, chunk_k=8)
+    kc = jnp.zeros((b, 32, kh, d)).at[:, :s].set(k)
+    vc = jnp.zeros((b, 32, kh, d)).at[:, :s].set(v)
+    dec = attention.decode_attention(q[:, -1:], kc, vc, cache_len=s, window=w)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_causality_property():
+    """Perturbing future K/V never changes earlier outputs."""
+    b, s, h, kh, d = 1, 16, 2, 2, 8
+    q, k, v = _qkv(jax.random.PRNGKey(5), b, s, h, kh, d)
+    out1 = attention.chunked_attention(q, k, v, chunk_q=4, chunk_k=4)
+    k2 = k.at[:, 10:].set(jax.random.normal(jax.random.PRNGKey(9),
+                                            k[:, 10:].shape))
+    v2 = v.at[:, 10:].set(-v[:, 10:])
+    out2 = attention.chunked_attention(q, k2, v2, chunk_q=4, chunk_k=4)
+    np.testing.assert_allclose(np.asarray(out1[:, :10]),
+                               np.asarray(out2[:, :10]), rtol=1e-6, atol=1e-6)
+    assert float(jnp.abs(out1[:, 10:] - out2[:, 10:]).max()) > 1e-3
+
+
+def test_probs_bf16_close_to_f32():
+    """perf knob (§Perf): bf16 probs must match f32 within bf16 tolerance."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models.attention import chunked_attention
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, KH, D = 2, 256, 4, 2, 16
+    q = jax.random.normal(k1, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(k2, (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(k3, (B, S, KH, D), jnp.float32)
+    ref = chunked_attention(q, k, v, chunk_q=64, chunk_k=64)
+    got = chunked_attention(q, k, v, chunk_q=64, chunk_k=64, probs_bf16=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,77 @@
+"""Unit + property tests for the binarization core."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize
+
+
+def test_ste_sign_forward():
+    x = jnp.array([-2.0, -0.0, 0.0, 0.5, 3.0])
+    out = binarize.ste_sign(x)
+    np.testing.assert_array_equal(np.asarray(out), [-1, 1, 1, 1, 1])
+
+
+def test_ste_sign_gradient_is_clipped_identity():
+    g = jax.grad(lambda x: jnp.sum(binarize.ste_sign(x) * jnp.arange(1.0, 5.0)))(
+        jnp.array([-2.0, -0.5, 0.5, 2.0]))
+    # |x|>1 -> 0 grad; |x|<=1 -> passthrough of upstream (1..4)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 2.0, 3.0, 0.0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.choice([-1.0, 1.0], size=(3, k)).astype(np.float32)
+    words = binarize.pack_signs(jnp.asarray(x), axis=-1)
+    assert words.shape == (3, (k + 31) // 32)
+    back = binarize.unpack_signs(words, k, axis=-1)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 256), seed=st.integers(0, 2**31 - 1))
+def test_xnor_dot_equals_integer_dot(k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.choice([-1, 1], size=(k,)).astype(np.float32)
+    w = rng.choice([-1, 1], size=(k,)).astype(np.float32)
+    aw = binarize.pack_signs(jnp.asarray(a))
+    ww = binarize.pack_signs(jnp.asarray(w))
+    got = binarize.xnor_dot_popcount(aw, ww, k)
+    assert int(got) == int(np.dot(a, w))
+
+
+def test_pack_axis_argument():
+    rng = np.random.default_rng(1)
+    x = rng.choice([-1.0, 1.0], size=(64, 5)).astype(np.float32)
+    words = binarize.pack_signs(jnp.asarray(x), axis=0)
+    assert words.shape == (2, 5)
+    back = binarize.unpack_signs(words, 64, axis=0)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bn_threshold_fold_equivalence(seed):
+    """sign(BN(s)) == threshold comparator for integer popcount sums."""
+    rng = np.random.default_rng(seed)
+    n = 16
+    s = rng.integers(-256, 257, size=(n,)).astype(np.float32)
+    gamma = rng.normal(size=(n,)).astype(np.float32)
+    gamma = np.where(np.abs(gamma) < 0.05, 0.05, gamma)  # avoid ~0 gamma
+    beta = rng.normal(size=(n,)).astype(np.float32)
+    mean = rng.normal(size=(n,)).astype(np.float32) * 10
+    var = rng.uniform(0.5, 4.0, size=(n,)).astype(np.float32)
+
+    bn = gamma * (s - mean) / np.sqrt(var + 1e-5) + beta
+    want = np.where(bn >= 0, 1.0, -1.0)
+
+    tau, flip = binarize.fold_bn_to_threshold(
+        jnp.asarray(gamma), jnp.asarray(beta), jnp.asarray(mean), jnp.asarray(var))
+    got = binarize.threshold_activation(jnp.asarray(s), tau, flip)
+    # exact equality can differ only when bn == 0 exactly; tolerate none here
+    mism = np.asarray(got) != want
+    assert mism.sum() == 0 or np.all(np.abs(bn[mism]) < 1e-4)

@@ -1,0 +1,147 @@
+"""Checkpoint/restore (+async, elastic), preemption, stragglers, retry."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs.registry import get_config
+from repro.data import tokens as dtok
+from repro.distributed import fault
+from repro.optim import optimizers as opt
+from repro.train import steps
+
+
+def _state(cfg, seed=0):
+    optimizer = opt.make("adamw", lambda s: 1e-3)
+    return steps.create_state(cfg, jax.random.PRNGKey(seed), optimizer), optimizer
+
+
+def test_save_restore_roundtrip(tmp_path):
+    cfg = get_config("smollm-360m").scaled().with_(dtype="float32",
+                                                   param_dtype="float32")
+    state, _ = _state(cfg)
+    path = os.path.join(tmp_path, "ckpt_1")
+    ckpt.save(path, state, step=1)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = ckpt.restore(path, like)
+    for (p1, a), (p2, b) in zip(
+            jax.tree_util.tree_flatten_with_path(state)[0],
+            jax.tree_util.tree_flatten_with_path(restored)[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_detects_shape_mismatch(tmp_path):
+    cfg = get_config("smollm-360m").scaled()
+    state, _ = _state(cfg)
+    path = os.path.join(tmp_path, "c")
+    ckpt.save(path, {"x": jnp.zeros((4,))})
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(path, {"x": jax.ShapeDtypeStruct((5,), jnp.float32)})
+
+
+def test_training_resumes_identically(tmp_path):
+    """crash/restart: resumed run == uninterrupted run (bitwise params)."""
+    cfg = get_config("smollm-360m").scaled().with_(
+        dtype="float32", param_dtype="float32", loss_chunk=32)
+    optimizer = opt.make("adamw", lambda s: 1e-3)
+    train_step = jax.jit(steps.build_train_step(cfg, optimizer))
+
+    def batch(s):
+        return dtok.batch_for_step(cfg, s, global_batch=4, seq_len=32)
+
+    # uninterrupted 6 steps
+    s1 = steps.create_state(cfg, jax.random.PRNGKey(0), optimizer)
+    for i in range(6):
+        s1, _ = train_step(s1, batch(i))
+
+    # interrupted at 3, checkpointed, restored, resumed (data is step-pure)
+    s2 = steps.create_state(cfg, jax.random.PRNGKey(0), optimizer)
+    for i in range(3):
+        s2, _ = train_step(s2, batch(i))
+    path = os.path.join(tmp_path, "ckpt_3")
+    ckpt.save(path, s2, step=3)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), s2)
+    s2r = ckpt.restore(path, like)
+    for i in range(3, 6):
+        s2r, _ = train_step(s2r, batch(i))
+
+    a = jax.tree.leaves(s1["params"])
+    b = jax.tree.leaves(s2r["params"])
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_async_checkpointer(tmp_path):
+    cfg = get_config("smollm-360m").scaled()
+    state, _ = _state(cfg)
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3):
+        ac.save(state, step)
+    ac.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    assert len(files) == 2  # GC keeps last 2
+
+
+def test_elastic_restore_onto_mesh(tmp_path):
+    """restore with mesh+specs places leaves as NamedSharding (1-dev mesh)."""
+    cfg = get_config("smollm-360m").scaled().with_(dtype="float32",
+                                                   param_dtype="float32")
+    state, optimizer = _state(cfg)
+    path = os.path.join(tmp_path, "ckpt_e")
+    ckpt.save(path, state, step=0)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    specs = steps.state_specs(cfg, mesh, optimizer)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = ckpt.restore(path, like, mesh=mesh, specs=specs)
+    leaf = jax.tree.leaves(restored["params"])[0]
+    assert isinstance(leaf.sharding, jax.sharding.NamedSharding)
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerance utilities
+# ---------------------------------------------------------------------------
+
+def test_step_timer_detects_straggler():
+    t = fault.StepTimer(window=20, threshold=2.5)
+    for _ in range(8):
+        with t:
+            time.sleep(0.005)
+    assert t.stragglers == 0
+    with t:
+        time.sleep(0.1)
+    assert t.stragglers == 1 and t.slow
+
+
+def test_retry_step_recovers():
+    calls = {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient collective failure")
+        return x + 1
+
+    assert fault.retry_step(flaky, 41, retries=3) == 42
+    assert calls["n"] == 3
+
+
+def test_retry_step_gives_up():
+    def always(x):
+        raise RuntimeError("hard failure")
+
+    with pytest.raises(RuntimeError):
+        fault.retry_step(always, 0, retries=2)
+
+
+def test_preemption_guard_flag():
+    g = fault.PreemptionGuard(install=False)
+    assert not g.requested
+    g._handler(15, None)
+    assert g.requested

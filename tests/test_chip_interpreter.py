@@ -1,0 +1,114 @@
+"""Interpreter equivalences: train-mode eval == folded inference == Pallas path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chip import interpreter, isa, networks, neuron_array as na
+
+
+def _small_program(s=4):
+    """A reduced program of the cifar9 family (small maps, full ISA checks)."""
+    f = isa.ARRAY_CHANNELS // s
+    instrs = (
+        isa.IOInstr(height=8, width=8, in_channels=3, bits=7, channels=f),
+        isa.ConvInstr(height=8, width=8, features=f, maxpool=True),   # ->3
+        isa.ConvInstr(height=3, width=3, features=f),                 # ->2
+        isa.FCInstr(in_features=2 * 2 * f, out_features=10, final=True),
+    )
+    p = isa.Program(s=s, instrs=instrs)
+    isa.validate(p)
+    return p
+
+
+def _images(key, h=8, w=8, b=2, c=3, levels=128):
+    return jax.random.randint(key, (b, h, w, c), 0, levels)
+
+
+def test_thermometer_encode_monotone():
+    """More intense pixels turn on >= as many +1 planes (monotone code)."""
+    img = jnp.arange(128)[None, :, None, None]  # (1, 128, 1, 1) values 0..127
+    enc = na.thermometer_encode(img, bits=7, channels=64)
+    ones = (enc > 0).sum(axis=-1)[0, :, 0]
+    assert bool(jnp.all(jnp.diff(ones) >= 0))
+    assert int(ones[0]) < int(ones[-1])
+
+
+def test_train_forward_shapes_and_finite():
+    p = _small_program()
+    key = jax.random.PRNGKey(0)
+    params = interpreter.init_params(key, p)
+    logits, new_params = interpreter.forward_train(params, p, _images(key))
+    assert logits.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # BN stats moved
+    assert not np.allclose(np.asarray(new_params["conv"][0]["mean"]), 0.0)
+
+
+def test_train_grads_flow_to_all_weights():
+    p = _small_program()
+    key = jax.random.PRNGKey(1)
+    params = interpreter.init_params(key, p)
+    imgs = _images(key)
+
+    def loss(params):
+        logits, _ = interpreter.forward_train(params, p, imgs)
+        return jnp.mean(logits ** 2)
+
+    g = jax.grad(loss)(params)
+    for gc in g["conv"]:
+        assert float(jnp.abs(gc["w"]).max()) > 0.0
+    for gf in g["fc"]:
+        assert float(jnp.abs(gf["w"]).max()) > 0.0
+
+
+@pytest.mark.parametrize("s", [1, 2, 4])
+def test_eval_equals_folded_inference(s):
+    """sign(BN(conv)) path == integer-threshold comparator path."""
+    p = _small_program(s)
+    key = jax.random.PRNGKey(2 + s)
+    params = interpreter.init_params(key, p)
+    # give BN stats a realistic nonzero state
+    _, params = interpreter.forward_train(params, p, _images(key, b=4))
+    imgs = _images(jax.random.PRNGKey(7), b=3)
+
+    logits_train, _ = interpreter.forward_train(params, p, imgs, train=False)
+    folded = interpreter.fold_params(params, p)
+    logits_inf, labels = interpreter.forward_infer(folded, p, imgs)
+    np.testing.assert_array_equal(np.asarray(logits_train), np.asarray(logits_inf))
+    assert labels.shape == (3,)
+
+
+def test_folded_inference_matches_pallas_kernels():
+    p = _small_program(4)
+    key = jax.random.PRNGKey(3)
+    params = interpreter.init_params(key, p)
+    _, params = interpreter.forward_train(params, p, _images(key, b=4))
+    folded = interpreter.fold_params(params, p)
+    imgs = _images(jax.random.PRNGKey(11), b=2)
+
+    logits_ref, labels_ref = interpreter.forward_infer(folded, p, imgs,
+                                                       use_kernels=False)
+    logits_krn, labels_krn = interpreter.forward_infer(folded, p, imgs,
+                                                       use_kernels=True,
+                                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(logits_ref), np.asarray(logits_krn))
+    np.testing.assert_array_equal(np.asarray(labels_ref), np.asarray(labels_krn))
+
+
+def test_infer_fn_jits():
+    p = _small_program(4)
+    key = jax.random.PRNGKey(4)
+    params = interpreter.init_params(key, p)
+    folded = interpreter.fold_params(params, p)
+    fn = interpreter.make_infer_fn(p)
+    logits, labels = fn(folded, _images(key))
+    assert logits.shape == (2, 10) and labels.shape == (2,)
+
+
+def test_maxpool_is_binary_or():
+    x = jnp.array([[[[-1.], [-1.]], [[-1.], [1.]]],
+                   [[[-1.], [-1.]], [[-1.], [-1.]]]])  # (2,2,2,1)
+    out = na.maxpool2x2(x)
+    np.testing.assert_array_equal(np.asarray(out).ravel(), [1.0, -1.0])

@@ -1,0 +1,90 @@
+"""ISA constraint checks + assemble/disassemble round-trip."""
+
+import numpy as np
+import pytest
+
+from repro.core.chip import isa, networks
+
+
+def test_benchmark_nets_validate():
+    for name, build in networks.REGISTRY.items():
+        isa.validate(build())
+
+
+def test_cifar9_matches_paper_footprints():
+    """The published SRAM sizes pin the 9-layer topology."""
+    p = networks.cifar9(1)
+    geoms = isa.layer_geometry(p)
+    conv_bits = sum(i.features * c * 4 for (i, _, _, c, *_r) in geoms
+                    if isinstance(i, isa.ConvInstr))
+    # 8 x 256x256x2x2 bits = 262 kB vs 259 kB weight SRAM (within 1.2%)
+    assert conv_bits == 8 * 256 * 256 * 4
+    assert conv_bits <= isa.WEIGHT_SRAM_BITS
+    # feature maps fit the 32 kB per-side activation SRAM exactly
+    assert 32 * 32 * 256 == isa.FEATURE_SRAM_BITS
+    # program fits the 16-slot instruction memory
+    assert len(p.instrs) == 10
+
+
+@pytest.mark.parametrize("s", [1, 2, 4])
+def test_assemble_roundtrip(s):
+    p = networks.cifar9(s)
+    words = isa.assemble(p)
+    assert words.shape == (isa.MAX_INSTRUCTIONS,)
+    assert words.dtype == np.uint32
+    q = isa.disassemble(words, s=s)
+    assert q == p
+
+
+def test_rejects_bad_s():
+    with pytest.raises(isa.ProgramError):
+        isa.validate(isa.Program(s=3, instrs=networks.cifar9(1).instrs))
+
+
+def test_rejects_too_many_instructions():
+    base = networks.cifar9(4)
+    pad = tuple(isa.FCInstr(in_features=64, out_features=64)
+                for _ in range(12))
+    bad = isa.Program(s=4, instrs=base.instrs[:-1] + pad
+                      + (isa.FCInstr(64, 10, final=True),))
+    with pytest.raises(isa.ProgramError, match="16 instructions"):
+        isa.validate(bad)
+
+
+def test_rejects_wrong_width_for_mode():
+    instrs = (isa.IOInstr(height=8, width=8, channels=256),
+              isa.ConvInstr(height=8, width=8, features=128),
+              isa.FCInstr(in_features=7 * 7 * 128, out_features=10, final=True))
+    with pytest.raises(isa.ProgramError, match="256/S"):
+        isa.validate(isa.Program(s=1, instrs=instrs))
+
+
+def test_rejects_too_many_classes():
+    p = networks.cifar9(4)
+    bad = isa.Program(s=4, instrs=p.instrs[:-1]
+                      + (isa.FCInstr(in_features=256, out_features=11, final=True),))
+    with pytest.raises(isa.ProgramError, match="classes"):
+        isa.validate(bad)
+
+
+def test_rejects_oversized_input():
+    instrs = (isa.IOInstr(height=40, width=40, channels=256),)
+    with pytest.raises(isa.ProgramError):
+        isa.validate(isa.Program(s=1, instrs=instrs))
+
+
+def test_rejects_shape_chain_mismatch():
+    instrs = (isa.IOInstr(height=16, width=16, channels=256),
+              isa.ConvInstr(height=14, width=14, features=256),
+              isa.FCInstr(in_features=13 * 13 * 256, out_features=10, final=True))
+    with pytest.raises(isa.ProgramError, match="pipeline provides"):
+        isa.validate(isa.Program(s=1, instrs=instrs))
+
+
+def test_rejects_fc_sram_overflow():
+    instrs = (isa.IOInstr(height=8, width=8, channels=256),
+              isa.ConvInstr(height=8, width=8, features=256),
+              isa.FCInstr(in_features=7 * 7 * 256, out_features=8, final=False),
+              isa.FCInstr(in_features=8, out_features=8, final=True))
+    with pytest.raises(isa.ProgramError, match="FC SRAM"):
+        isa.validate(isa.Program(s=1, instrs=instrs))

@@ -1,0 +1,90 @@
+"""binary_conv2x2 Pallas kernel vs oracle + binarize_pack kernel tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize
+from repro.kernels import ref
+from repro.kernels.binarize_pack import binarize_pack
+from repro.kernels.binary_conv2x2 import binary_conv2x2
+
+
+def _rand_signs(rng, shape):
+    return rng.choice(np.array([-1.0, 1.0], np.float32), size=shape)
+
+
+def _pack_weights(w_signs):
+    """(F,2,2,C) +/-1 -> (F,4,Cw) uint32."""
+    f, _, _, c = w_signs.shape
+    return binarize.pack_signs(jnp.asarray(w_signs).reshape(f, 4, c), axis=-1)
+
+
+CASES = [
+    (4, 4, 32, 8),      # tiny map
+    (32, 32, 64, 64),   # chip S=4 layer shape
+    (32, 32, 256, 64),  # chip S=1 layer shape (256 ch)
+    (31, 31, 128, 32),  # odd spatial, S=2 channels
+    (8, 9, 40, 16),     # non-square, C not multiple of 32
+]
+
+
+@pytest.mark.parametrize("h,w,c,f", CASES)
+def test_matches_oracle(h, w, c, f):
+    rng = np.random.default_rng(h * 100 + w * 10 + c + f)
+    a = _rand_signs(rng, (h, w, c))
+    wgt = _rand_signs(rng, (f, 2, 2, c))
+    a_words = binarize.pack_signs(jnp.asarray(a), axis=-1)
+    got = binary_conv2x2(a_words, _pack_weights(wgt), c=c, interpret=True)
+    want = ref.binary_conv2x2_ref(jnp.asarray(a), jnp.asarray(wgt))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bf", [8, 32, 64])
+def test_f_tile_invariance(bf):
+    rng = np.random.default_rng(11)
+    a = _rand_signs(rng, (16, 16, 64))
+    wgt = _rand_signs(rng, (96, 2, 2, 64))
+    a_words = binarize.pack_signs(jnp.asarray(a), axis=-1)
+    got = binary_conv2x2(a_words, _pack_weights(wgt), c=64, bf=bf, interpret=True)
+    want = ref.binary_conv2x2_ref(jnp.asarray(a), jnp.asarray(wgt))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(h=st.integers(2, 12), w=st.integers(2, 12), c=st.integers(1, 70),
+       f=st.integers(1, 20), seed=st.integers(0, 2**31 - 1))
+def test_property_random(h, w, c, f, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand_signs(rng, (h, w, c))
+    wgt = _rand_signs(rng, (f, 2, 2, c))
+    a_words = binarize.pack_signs(jnp.asarray(a), axis=-1)
+    got = binary_conv2x2(a_words, _pack_weights(wgt), c=c, bf=8, interpret=True)
+    want = ref.binary_conv2x2_ref(jnp.asarray(a), jnp.asarray(wgt))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# binarize_pack kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k", [(1, 32), (5, 100), (300, 64), (256, 4096)])
+def test_binarize_pack_matches_oracle(m, k):
+    rng = np.random.default_rng(m + k)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    got = binarize_pack(jnp.asarray(x), interpret=True)
+    want = ref.binarize_pack_ref(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 64), k=st.integers(1, 200), seed=st.integers(0, 2**31 - 1))
+def test_binarize_pack_roundtrip(m, k, seed):
+    """unpack(pack(sign(x))) == sign(x) for all shapes."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    words = binarize_pack(jnp.asarray(x), bm=16, interpret=True)
+    signs = binarize.unpack_signs(words, k, axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(signs), np.asarray(binarize.hard_sign(jnp.asarray(x))))

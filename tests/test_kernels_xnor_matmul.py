@@ -1,0 +1,94 @@
+"""xnor_matmul Pallas kernel vs pure-jnp oracle: shape/dtype sweeps + properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize
+from repro.kernels import ops, ref
+from repro.kernels.xnor_matmul import xnor_matmul
+
+
+def _rand_signs(rng, shape):
+    return rng.choice(np.array([-1.0, 1.0], np.float32), size=shape)
+
+
+SHAPES = [
+    (1, 1, 32),       # minimal
+    (3, 5, 32),       # sub-tile M/N
+    (16, 64, 64),     # K spans 2 words
+    (128, 128, 256),  # exactly one default tile
+    (130, 129, 2048), # padding on every axis, multi-word K
+    (256, 64, 100),   # K not a multiple of 32 (padded packing)
+]
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+def test_matches_oracle(m, n, k):
+    rng = np.random.default_rng(seed=m * 7919 + n * 31 + k)
+    a = _rand_signs(rng, (m, k))
+    w = _rand_signs(rng, (n, k))
+    a_words = binarize.pack_signs(jnp.asarray(a), axis=-1)
+    w_words = binarize.pack_signs(jnp.asarray(w), axis=-1)
+    got = xnor_matmul(a_words, w_words, k=k, interpret=True)
+    want = ref.xnor_matmul_ref(jnp.asarray(a), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 1), (32, 16, 2), (128, 128, 64)])
+def test_tile_shape_invariance(bm, bn, bk):
+    """Result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(0)
+    m, n, k = 96, 80, 96
+    a = _rand_signs(rng, (m, k))
+    w = _rand_signs(rng, (n, k))
+    a_words = binarize.pack_signs(jnp.asarray(a), axis=-1)
+    w_words = binarize.pack_signs(jnp.asarray(w), axis=-1)
+    got = xnor_matmul(a_words, w_words, k=k, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.xnor_matmul_ref(jnp.asarray(a), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    kw=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_random_shapes(m, n, kw, seed):
+    k = kw * 32 - (seed % 7)  # exercise non-multiple-of-32 K too
+    k = max(k, 1)
+    rng = np.random.default_rng(seed)
+    a = _rand_signs(rng, (m, k))
+    w = _rand_signs(rng, (n, k))
+    a_words = binarize.pack_signs(jnp.asarray(a), axis=-1)
+    w_words = binarize.pack_signs(jnp.asarray(w), axis=-1)
+    got = xnor_matmul(a_words, w_words, k=k, bm=16, bn=16, bk=2, interpret=True)
+    want = ref.xnor_matmul_ref(jnp.asarray(a), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_output_parity_property():
+    """dot of +/-1 vectors of length k always has parity of k (mod 2)."""
+    rng = np.random.default_rng(3)
+    k = 37
+    a = _rand_signs(rng, (9, k))
+    w = _rand_signs(rng, (11, k))
+    got = np.asarray(xnor_matmul(
+        binarize.pack_signs(jnp.asarray(a)), binarize.pack_signs(jnp.asarray(w)),
+        k=k, interpret=True))
+    assert np.all((got - k) % 2 == 0)
+    assert got.min() >= -k and got.max() <= k
+
+
+def test_binary_linear_end_to_end():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(4, 7, 200)).astype(np.float32)
+    w = _rand_signs(rng, (30, 200))
+    got = ops.binary_linear(jnp.asarray(x), jnp.asarray(w), interpret=True)
+    want = ref.xnor_matmul_ref(binarize.hard_sign(jnp.asarray(x)).reshape(-1, 200),
+                               jnp.asarray(w)).reshape(4, 7, 30)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

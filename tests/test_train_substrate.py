@@ -1,0 +1,178 @@
+"""Training substrate: learning, optimizers, data determinism, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data import tokens as dtok
+from repro.optim import grad_compress, optimizers as opt
+from repro.train import steps
+
+
+def _run(cfg, optimizer, n_steps, seed=0):
+    state = steps.create_state(cfg, jax.random.PRNGKey(seed), optimizer)
+    train_step = jax.jit(steps.build_train_step(cfg, optimizer))
+    losses = []
+    for s in range(n_steps):
+        batch = dtok.batch_for_step(cfg, s, global_batch=8, seq_len=64)
+        state, m = train_step(state, batch)
+        losses.append(float(m["loss"]))
+    return losses, state
+
+
+def test_lm_training_learns():
+    cfg = get_config("smollm-360m").scaled().with_(
+        dtype="float32", param_dtype="float32", loss_chunk=32)
+    optimizer = opt.make("adamw", opt.cosine_schedule(3e-3, 10, 200))
+    losses, _ = _run(cfg, optimizer, 40)
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0] - 0.8, (losses[0], losses[-1])
+
+
+def test_binary_lm_training_learns():
+    """BinaryNet (the paper's technique) trains via STE at LM scale."""
+    cfg = get_config("smollm-360m").scaled().with_(
+        dtype="float32", param_dtype="float32", loss_chunk=32, quant="binary")
+    optimizer = opt.make("adamw", opt.cosine_schedule(3e-3, 10, 200))
+    losses, _ = _run(cfg, optimizer, 40)
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+
+def test_loss_chunking_invariance():
+    """chunked CE must not depend on the chunk size."""
+    cfg = get_config("smollm-360m").scaled().with_(
+        dtype="float32", param_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    from repro.models import transformer
+    params = transformer.init_params(key, cfg)
+    batch = dtok.batch_for_step(cfg, 0, global_batch=4, seq_len=64)
+    losses = []
+    for chunk in (16, 32, 64):
+        c = cfg.with_(loss_chunk=chunk)
+        loss, _ = steps.make_loss_fn(c)(params, batch)
+        losses.append(float(loss))
+    np.testing.assert_allclose(losses, losses[0], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def _quad_losses(optimizer, n=60):
+    """Minimize ||Wx - y||^2; return loss trace."""
+    key = jax.random.PRNGKey(0)
+    target = jax.random.normal(key, (16, 16))
+    params = {"w": jnp.zeros((16, 16)), "b": jnp.zeros((16,))}
+    state = optimizer.init(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    y = x @ target.T
+
+    def loss_fn(p):
+        return jnp.mean((x @ p["w"].T + p["b"] - y) ** 2)
+
+    losses = []
+    step = jnp.zeros((), jnp.int32)
+    for i in range(n):
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = optimizer.update(g, state, params, step)
+        step = step + 1
+        losses.append(float(l))
+    return losses
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("adamw", dict(weight_decay=0.0)),
+    ("adafactor", dict(min_dim_size_to_factor=8)),
+    ("sgdm", dict()),
+])
+def test_optimizer_converges(name, kw):
+    optimizer = opt.make(name, lambda s: 3e-2, **kw)
+    losses = _quad_losses(optimizer)
+    assert losses[-1] < losses[0] * 0.05, (name, losses[0], losses[-1])
+
+
+def test_adafactor_state_is_factored():
+    optimizer = opt.make("adafactor", lambda s: 1e-3)
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((4,))}
+    st = optimizer.init(params)
+    assert set(st["v"]["big"]) == {"vr", "vc"}
+    assert st["v"]["big"]["vr"].shape == (256,)
+    assert st["v"]["big"]["vc"].shape == (512,)
+    assert set(st["v"]["small"]) == {"v"}
+
+
+def test_cosine_schedule_shape():
+    lr = opt.cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) < 0.2
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 0.11
+    assert float(lr(jnp.int32(99))) < 0.2
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = opt.clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 20.0) < 1e-4
+    assert abs(float(opt.global_norm(clipped)) - 1.0) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Data determinism
+# ---------------------------------------------------------------------------
+
+def test_data_is_deterministic_per_step():
+    cfg = get_config("smollm-360m").scaled()
+    a = dtok.batch_for_step(cfg, 7, global_batch=4, seq_len=32)
+    b = dtok.batch_for_step(cfg, 7, global_batch=4, seq_len=32)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = dtok.batch_for_step(cfg, 8, global_batch=4, seq_len=32)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_data_labels_are_shifted_stream():
+    cfg = get_config("smollm-360m").scaled()
+    b = dtok.batch_for_step(cfg, 0, global_batch=2, seq_len=16)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_data_host_sharding_disjoint():
+    cfg = get_config("smollm-360m").scaled()
+    h0 = dtok.batch_for_step(cfg, 3, global_batch=8, seq_len=16,
+                             host_id=0, num_hosts=2)
+    h1 = dtok.batch_for_step(cfg, 3, global_batch=8, seq_len=16,
+                             host_id=1, num_hosts=2)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(np.asarray(h0["tokens"]),
+                              np.asarray(h1["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compress_roundtrip_error_feedback():
+    g = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    err = jnp.zeros_like(g)
+    q, scale, err1 = grad_compress.compress(g, err)
+    deq = grad_compress.decompress(q, scale)
+    # int8: coarse but unbiased-ish; residual captured exactly
+    np.testing.assert_allclose(np.asarray(deq + err1), np.asarray(g),
+                               rtol=1e-6, atol=1e-6)
+    assert float(jnp.abs(err1).max()) <= float(scale) * 0.5 + 1e-9
+
+
+def test_error_feedback_converges():
+    """Accumulated dequantized updates approach the true gradient sum."""
+    key = jax.random.PRNGKey(1)
+    true_g = jax.random.normal(key, (64,)) * 0.01
+    err = jnp.zeros_like(true_g)
+    acc = jnp.zeros_like(true_g)
+    for _ in range(50):
+        q, scale, err = grad_compress.compress(true_g, err)
+        acc = acc + grad_compress.decompress(q, scale)
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(true_g),
+                               rtol=0.02, atol=1e-5)
