@@ -1,28 +1,42 @@
-"""Kernel-level microbenchmark: the XNOR-popcount binary path vs the
-float path, wall-clock on this host (CPU XLA) plus the analytic TPU
-picture.
+"""Kernel-level microbenchmark: the packed-domain inference pipeline.
 
-On TPU the binary path's win is structural: 32 channels/int32 lane give a
-32x bandwidth-density gain on the VPU (the MXU has no 1-bit mode), which
-is the BinarEye insight mapped to TPU.  On CPU XLA we can still *measure*
-the packed-popcount path vs float matmul to show the data-movement win is
-real, and we verify allclose against ref.py oracles.
+Three measurements, all on this host (CPU XLA; on TPU the same code
+lowers through Mosaic):
+
+1. packed XNOR-popcount matmul vs float matmul (the seed's original
+   data-movement demonstration, kept as a trend anchor);
+2. the fused batched pipeline (``InferencePlan``: single IO pack, fused
+   conv->threshold->pool->repack stages, packed hidden FC) vs the seed
+   path (per-image ``jax.vmap`` conv kernel + float comparator + repack
+   at every layer boundary) on a full benchmark program — this is the
+   end-to-end win of keeping feature maps bit-packed;
+3. frames/sec of the deployed plan, the serving-throughput headline.
+
+Results are written to ``BENCH_kernels.json`` so CI keeps a perf
+trajectory across PRs.  Exit 0 iff both paths are bit-exact vs their
+oracles.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import binarize
+from repro.core.chip import interpreter, networks, neuron_array as na
 from repro.kernels import ops, ref
+from repro.kernels import binary_conv2x2 as _bc
+
+BENCH_JSON = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
 
 
 def _bench(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))              # compile + warm
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -30,7 +44,40 @@ def _bench(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def run(csv: bool = True):
+def _seed_vmap_forward(program, folded, images):
+    """The seed inference path, reproduced verbatim as the baseline: a
+    per-image vmap of the 3D conv kernel, float comparator, float pool,
+    and a pack/unpack round-trip at *every* layer boundary."""
+    ci = fi = 0
+    x = None
+    from repro.core.chip import isa
+    for ins in program.instrs:
+        if isinstance(ins, isa.IOInstr):
+            x = na.thermometer_encode(images, ins.bits, ins.channels)
+        elif isinstance(ins, isa.ConvInstr):
+            p = folded["conv"][ci]
+            c = x.shape[-1]
+            f = p["w"].shape[0]
+            x_words = binarize.pack_signs(x, axis=-1)
+            w_words = binarize.pack_signs(p["w"].reshape(f, 4, c), axis=-1)
+            conv = lambda img: _bc.binary_conv2x2(
+                img, w_words, c=c, interpret=ops.default_interpret())
+            s = jax.vmap(conv)(x_words).astype(jnp.float32)
+            x = na.comparator(s, p["tau"], p["flip"])
+            if ins.maxpool:
+                x = na.maxpool2x2(x)
+            ci += 1
+        else:
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            p = folded["fc"][fi]
+            s = na.fc_packed(x, p["w"])
+            x = s if ins.final else binarize.hard_sign(s)
+            fi += 1
+    return x, jnp.argmax(x, axis=-1)
+
+
+def _bench_matmul(results):
     key = jax.random.PRNGKey(0)
     M, K, N = 512, 1024, 512
     a = jnp.where(jax.random.bernoulli(key, shape=(M, K)), 1, -1).astype(jnp.int8)
@@ -47,13 +94,10 @@ def run(csv: bool = True):
 
     t_float = _bench(float_mm, a_f, w_f)
     t_packed = _bench(packed_mm, a_words, w_words)
+    ok = bool(jnp.all(packed_mm(a_words, w_words).astype(jnp.float32)
+                      == a_f @ w_f))
 
-    got = packed_mm(a_words, w_words)
-    want = a_f @ w_f
-    ok = bool(jnp.all(got.astype(jnp.float32) == want))
-
-    print("\n== Kernel microbench: XNOR-popcount vs float matmul "
-          f"({M}x{K}x{N}) ==")
+    print(f"\n== XNOR-popcount vs float matmul ({M}x{K}x{N}) ==")
     print(f"float f32 matmul : {t_float:9.0f} us")
     print(f"packed xnor path : {t_packed:9.0f} us   "
           f"({t_float/t_packed:.1f}x vs float on CPU XLA)")
@@ -62,20 +106,70 @@ def run(csv: bool = True):
           f"({(a_f.nbytes + w_f.nbytes)/(a_words.nbytes + w_words.nbytes):.0f}x "
           "bandwidth density)")
     print(f"exact match vs float oracle: {ok}")
+    results["xnor_matmul_us"] = round(t_packed, 1)
+    results["float_matmul_us"] = round(t_float, 1)
+    results["matmul_speedup_vs_float"] = round(t_float / t_packed, 2)
+    return ok
 
-    # analytic TPU picture (per chip): binary VPU path vs bf16 MXU path
-    # VPU: 8x128 lanes x ~940 MHz x (xor+popcount+acc ~ 3 ops on 32 ch) =
-    #      ~32 ch/lane -> ~1e13 int ops/s -> ~3.2e14 1b-MAC/s
-    # MXU bf16: 197e12/2 = 9.85e13 MAC/s with +-1 as bf16
-    vpu_1b_macs = 8 * 128 * 940e6 * 32 / 3
-    mxu_bf16_macs = 197e12 / 2
-    print(f"TPU analytic: VPU packed-binary ~{vpu_1b_macs:.1e} MAC/s vs "
-          f"MXU bf16(+-1) ~{mxu_bf16_macs:.1e} MAC/s -> "
-          f"{vpu_1b_macs/mxu_bf16_macs:.1f}x, plus 16x smaller weight "
-          "footprint (VMEM-resident models)")
+
+def _bench_pipeline(results):
+    """Fused batched plan vs the seed per-image-vmap path, full program."""
+    program = networks.mnist5()
+    batch = 8
+    key = jax.random.PRNGKey(2)
+    params = interpreter.init_params(key, program)
+    io = program.instrs[0]
+    imgs = jax.random.randint(
+        jax.random.PRNGKey(3), (batch, io.height, io.width, io.in_channels),
+        0, 2 ** io.bits)
+    _, params = interpreter.forward_train(params, program, imgs)
+    folded = interpreter.fold_params(params, program)
+    packed = interpreter.pack_folded(folded)
+
+    plan = interpreter.compile_plan(program)
+    # interpret=None -> per-backend choice: Python interpret on CPU,
+    # Mosaic lowering on a real TPU (keeps the perf trajectory honest)
+    fused = jax.jit(lambda pk, im: plan.forward(pk, im))
+    seed = jax.jit(lambda fl, im: _seed_vmap_forward(program, fl, im))
+
+    t_fused = _bench(fused, packed, imgs, iters=3)
+    t_seed = _bench(seed, folded, imgs, iters=3)
+
+    logits_f, labels_f = fused(packed, imgs)
+    logits_s, labels_s = seed(folded, imgs)
+    ok = bool(jnp.all(logits_f == logits_s) and jnp.all(labels_f == labels_s))
+    fps = batch / (t_fused * 1e-6)
+    speedup = t_seed / t_fused
+
+    print(f"\n== Packed pipeline ({program.instrs[1].features}-wide mnist5, "
+          f"batch={batch}) ==")
+    print(f"seed per-image vmap path : {t_seed:9.0f} us/batch "
+          "(int32->float->repack at every layer)")
+    print(f"fused batched plan       : {t_fused:9.0f} us/batch "
+          "(bit-packed end to end)")
+    print(f"  -> {speedup:.2f}x, {fps:,.0f} frames/s host-sim throughput")
+    print(f"fused plan bit-exact vs seed path: {ok}")
+    results["pipeline_seed_vmap_us"] = round(t_seed, 1)
+    results["pipeline_fused_us"] = round(t_fused, 1)
+    results["pipeline_fused_speedup"] = round(speedup, 2)
+    results["pipeline_frames_per_s"] = round(fps, 1)
+    results["pipeline_batch"] = batch
+    return ok, speedup
+
+
+def run(csv: bool = True):
+    results = {"backend": jax.default_backend()}
+    ok_mm = _bench_matmul(results)
+    ok_pipe, speedup = _bench_pipeline(results)
+    ok = ok_mm and ok_pipe
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"\nwrote {BENCH_JSON}")
     if csv:
-        print(f"CSV,kernel_microbench,{t_packed:.0f},"
-              f"speedup_vs_float={t_float/t_packed:.2f};exact={int(ok)}")
+        print(f"CSV,kernel_microbench,{results['pipeline_fused_us']:.0f},"
+              f"fused_speedup={speedup:.2f};"
+              f"fps={results['pipeline_frames_per_s']:.0f};exact={int(ok)}")
     return ok
 
 

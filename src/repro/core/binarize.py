@@ -80,6 +80,22 @@ def pack_signs(x: jax.Array, axis: int = -1) -> jax.Array:
     return jnp.moveaxis(words, -1, axis)
 
 
+def pack_bit_lanes(bits: jax.Array) -> jax.Array:
+    """Pack a (..., K) array of {0,1} sign bits into (..., K//32) uint32.
+
+    The shared packing idiom for code that already *has* sign bits
+    (Pallas kernel bodies, the packed thermometer encoder) — same
+    LSB-first lane order as :func:`pack_signs`, which handles the
+    +/-1-float and padding cases.  K must be a multiple of 32.
+    """
+    k = bits.shape[-1]
+    assert k % PACK_WIDTH == 0, k
+    lanes = bits.astype(_PACK_DTYPE).reshape(
+        bits.shape[:-1] + (k // PACK_WIDTH, PACK_WIDTH))
+    shifts = jnp.arange(PACK_WIDTH, dtype=_PACK_DTYPE)
+    return jnp.sum(lanes << shifts, axis=-1, dtype=_PACK_DTYPE)
+
+
 def unpack_signs(words: jax.Array, k: int, axis: int = -1,
                  dtype=jnp.float32) -> jax.Array:
     """Inverse of :func:`pack_signs`; returns +/-1 of length ``k``."""
@@ -128,3 +144,17 @@ def threshold_activation(s: jax.Array, tau: jax.Array, flip: jax.Array) -> jax.A
     ge = s >= tau
     out = jnp.where(jnp.logical_xor(ge, flip), 1.0, -1.0)
     return out.astype(jnp.float32)
+
+
+def threshold_to_int(tau: jax.Array) -> jax.Array:
+    """Quantize the folded float threshold to the int32 the chip stores.
+
+    The conv sums ``s`` are integers (bounded by +/-4*C <= 1024, exactly
+    representable in fp32), so ``s >= tau``  <=>  ``s >= ceil(tau)`` and
+    the comparator needs only an integer register per neuron — this is
+    the deployment form of the BN fold.  Inf thresholds (a neuron stuck
+    off/on) saturate to the int32 range, preserving the always/never-fire
+    behaviour for any reachable ``s``.
+    """
+    lo, hi = jnp.float32(-2**31), jnp.float32(2**31 - 256)
+    return jnp.clip(jnp.ceil(tau), lo, hi).astype(jnp.int32)

@@ -7,21 +7,34 @@ Two modes mirror the chip's lifecycle:
   BatchNorm before the sign activation.  Differentiable end to end.
 * ``forward_infer``  — deployment semantics.  BN folded into the per-neuron
   integer threshold comparator; weights/activations are hard +/-1; the
-  compute can run through the packed Pallas XNOR-popcount kernels
-  (``use_kernels=True``) or the float reference path.  Both paths must agree
-  bit-exactly (tested).
+  compute can run through the packed Pallas pipeline (``use_kernels=True``)
+  or the float reference path.  Both paths must agree bit-exactly (tested).
+
+Deployment is organized around :class:`InferencePlan` — the program's
+geometry is resolved *once* at build time into a static pipeline of fused
+packed stages, mirroring how the chip's controller walks its 16-slot
+program memory.  The plan consumes the packed deployment artifact from
+``fold_params(..., packed=True)``: uint32 weight words plus int32
+comparator thresholds, exactly what the silicon's SRAMs hold.  At run
+time feature maps stay bit-packed end to end — a single pack at the IO
+thermometer encoding, fused conv->threshold->pool->repack per CNN layer
+(``binary_conv2x2_block``), fused sign+pack hidden FCs
+(``xnor_matmul(pack_out=True)``), and a single unpack-free int32 readout
+at the final FC logits.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, Dict
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import binarize
 from repro.core.chip import isa, neuron_array as na
+from repro.kernels import ops as kops
 
 BN_EPS = 1e-4
 BN_MOMENTUM = 0.9
@@ -105,20 +118,170 @@ def forward_train(params, program: isa.Program, images: jax.Array,
 # Inference-mode forward (folded thresholds, optional Pallas kernels)
 # ---------------------------------------------------------------------------
 
-def fold_params(params, program: isa.Program):
-    """Fold BN into integer comparator thresholds (what the chip stores)."""
+def fold_params(params, program: isa.Program, *, packed: bool = False):
+    """Fold BN into comparator thresholds (what the chip stores).
+
+    With ``packed=False`` (default) returns the float-domain folded form:
+    +/-1 weight tensors plus float ``tau``/``flip`` per conv — the
+    reference the packed path is tested bit-exact against.  With
+    ``packed=True`` returns the deployment artifact consumed by
+    :class:`InferencePlan` (see :func:`pack_folded` for the layout).
+    """
     folded_convs = []
     for p in params["conv"]:
         tau, flip = binarize.fold_bn_to_threshold(
             p["gamma"], p["beta"], p["mean"], p["var"], eps=BN_EPS)
         folded_convs.append(dict(w=binarize.hard_sign(p["w"]), tau=tau, flip=flip))
     fcs = [dict(w=binarize.hard_sign(p["w"])) for p in params["fc"]]
-    return {"conv": folded_convs, "fc": fcs}
+    folded = {"conv": folded_convs, "fc": fcs}
+    return pack_folded(folded) if packed else folded
+
+
+def pack_folded(folded) -> Dict[str, Any]:
+    """Bit-pack a float-domain folded artifact into the deployment form.
+
+    Layout (the TPU analogue of the chip's SRAM contents):
+      conv[i]["w_words"]: (F, 4, ceil(C/32)) uint32 — taps (dy, dx)
+          row-major, channels packed LSB-first (bit=1 encodes -1);
+      conv[i]["tau"]:     (F,) int32 integer comparator thresholds
+          (``s >= tau`` fires; the ceil of the folded float threshold);
+      conv[i]["flip"]:    (F,) int32 comparator direction (gamma < 0);
+      fc[i]["w_words"]:   (N, ceil(K/32)) uint32, K packed in the
+          row-major flatten order of the preceding (H, W, F) map.
+    """
+    convs = []
+    for p in folded["conv"]:
+        f, _, _, c = p["w"].shape
+        convs.append(dict(
+            w_words=binarize.pack_signs(p["w"].reshape(f, 4, c), axis=-1),
+            tau=binarize.threshold_to_int(p["tau"]),
+            flip=p["flip"].astype(jnp.int32)))
+    fcs = [dict(w_words=binarize.pack_signs(p["w"], axis=-1))
+           for p in folded["fc"]]
+    return {"conv": convs, "fc": fcs}
+
+
+def _is_packed_artifact(folded) -> bool:
+    stages = list(folded["conv"]) + list(folded["fc"])
+    return bool(stages) and "w_words" in stages[0]
+
+
+# ---------------------------------------------------------------------------
+# Compiled inference plan: the packed-domain pipeline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _IOStage:
+    bits: int
+    channels: int
+
+
+@dataclasses.dataclass(frozen=True)
+class _ConvStage:
+    c: int                 # true input channel count
+    features: int
+    pool: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class _FCStage:
+    in_features: int
+    out_features: int
+    final: bool
+    pack_out: bool         # hidden layer stays packed (out % 32 == 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class InferencePlan:
+    """A program compiled to a static pipeline of fused packed stages.
+
+    Built once per program by :func:`compile_plan`; all geometry (map
+    sizes, channel counts, pool flags, FC fan-in) is resolved at build
+    time so the jitted forward is a straight-line chain of Pallas calls
+    with no Python-level reinterpretation of the instruction stream.
+    """
+    program: isa.Program
+    stages: Tuple[Any, ...]
+
+    def forward(self, packed, images: jax.Array,
+                interpret: bool | None = None):
+        """Packed deployment forward. Returns (logits int32->f32, labels)."""
+        ci = fi = 0
+        x = logits = None
+        for st in self.stages:
+            if isinstance(st, _IOStage):
+                x = na.thermometer_encode_packed(images, st.bits, st.channels)
+            elif isinstance(st, _ConvStage):
+                p = packed["conv"][ci]
+                x = kops.binary_conv2x2_block(
+                    x, p["w_words"], p["tau"], p["flip"], st.c,
+                    pool=st.pool, interpret=interpret)
+                ci += 1
+            else:
+                if x.ndim == 4:
+                    # packed (B, H, W, F//32) words flatten directly into
+                    # packed FC rows: F % 32 == 0 makes the word order the
+                    # row-major channel order.
+                    x = x.reshape(x.shape[0], -1)
+                p = packed["fc"][fi]
+                s = kops.xnor_matmul(x, p["w_words"], st.in_features,
+                                     pack_out=st.pack_out,
+                                     interpret=interpret)
+                if st.final:
+                    logits = s
+                elif st.pack_out:
+                    x = s
+                else:   # odd-width hidden FC: threshold at 0, repack
+                    x = binarize.pack_signs(
+                        binarize.hard_sign(s.astype(jnp.float32)), axis=-1)
+                fi += 1
+        logits = logits.astype(jnp.float32)
+        return logits, jnp.argmax(logits, axis=-1)
+
+    def make_fn(self, interpret: bool | None = None):
+        """jit: (packed_artifact, images) -> (logits, labels)."""
+        @jax.jit
+        def fn(packed, images):
+            return self.forward(packed, images, interpret=interpret)
+        return fn
+
+
+@functools.lru_cache(maxsize=64)
+def compile_plan(program: isa.Program) -> InferencePlan:
+    """Resolve a program's geometry into a static packed-stage pipeline."""
+    stages = []
+    for (ins, _in_h, _in_w, in_c, _oh, _ow, _oc) in isa.layer_geometry(program):
+        if isinstance(ins, isa.IOInstr):
+            stages.append(_IOStage(bits=ins.bits, channels=ins.channels))
+        elif isinstance(ins, isa.ConvInstr):
+            if ins.features % binarize.PACK_WIDTH:
+                raise isa.ProgramError(
+                    f"packed plan needs conv F % {binarize.PACK_WIDTH} == 0, "
+                    f"got {ins.features}")
+            stages.append(_ConvStage(c=in_c, features=ins.features,
+                                     pool=ins.maxpool))
+        else:
+            pack_out = (not ins.final
+                        and ins.out_features % binarize.PACK_WIDTH == 0)
+            stages.append(_FCStage(in_features=ins.in_features,
+                                   out_features=ins.out_features,
+                                   final=ins.final, pack_out=pack_out))
+    return InferencePlan(program=program, stages=tuple(stages))
 
 
 def forward_infer(folded, program: isa.Program, images: jax.Array,
                   use_kernels: bool = False, interpret: bool | None = None):
-    """Deployment forward. Returns (logits, labels)."""
+    """Deployment forward. Returns (logits, labels).
+
+    ``use_kernels=True`` routes through the compiled packed plan (packing
+    the float artifact on the fly if needed); ``use_kernels=False`` is
+    the float +/-1 reference path the plan is tested bit-exact against.
+    """
+    if use_kernels:
+        packed = folded if _is_packed_artifact(folded) else pack_folded(folded)
+        return compile_plan(program).forward(packed, images,
+                                             interpret=interpret)
+
     ci = fi = 0
     x = None
     for ins in program.instrs:
@@ -126,10 +289,7 @@ def forward_infer(folded, program: isa.Program, images: jax.Array,
             x = na.thermometer_encode(images, ins.bits, ins.channels)
         elif isinstance(ins, isa.ConvInstr):
             p = folded["conv"][ci]
-            if use_kernels:
-                s = na.conv2x2_packed(x, p["w"], interpret=interpret)
-            else:
-                s = na.conv2x2(x, p["w"])
+            s = na.conv2x2(x, p["w"])
             x = na.comparator(s, p["tau"], p["flip"])
             if ins.maxpool:
                 x = na.maxpool2x2(x)
@@ -138,10 +298,7 @@ def forward_infer(folded, program: isa.Program, images: jax.Array,
             if x.ndim == 4:
                 x = x.reshape(x.shape[0], -1)
             p = folded["fc"][fi]
-            if use_kernels:
-                s = na.fc_packed(x, p["w"], interpret=interpret)
-            else:
-                s = na.fc(x, p["w"])
+            s = na.fc(x, p["w"])
             x = s if ins.final else binarize.hard_sign(s)
             fi += 1
     return x, jnp.argmax(x, axis=-1)

@@ -162,24 +162,54 @@ def validate(p: Program) -> None:
 # ---------------------------------------------------------------------------
 # Binary encoding of the program memory
 # ---------------------------------------------------------------------------
-# word layout (LSB first):  op:2 | h:6 | w:6 | f_or_in:11 | out:4 | pool:1 |
-#                           final:1 | (io) bits:3
+# word layout (LSB first):
+#   IO:   op:2 | h:6 (2-7) | w:6 (8-13) | ch:11 (14-24) | in_ch:3 (25-27) |
+#         bits:4 (28-31)
+#   CNN:  op:2 | h:6 (2-7) | w:6 (8-13) | f:11 (14-24) | pool:1 (25)
+#   FC:   op:2 | out:10 (2-11) | in:11 (14-24) | final:1 (25)
+# The FC ``out`` field reuses the h/w bit range (spatial fields are
+# meaningless for FC) and is 10 bits wide so a full-array hidden layer
+# (out_features = 256, and headroom to 1023) round-trips — the original
+# 4-bit field silently corrupted anything above 15 (e.g. mnist5's
+# 64-wide hidden FC).  The IO word similarly gained an in_channels field
+# and a 4-bit precision field (the original 3-bit field truncated
+# mnist5's 8-bit input to 0 and dropped in_channels entirely).
+_FC_OUT_MAX = 0x3FF
+_FC_IN_MAX = 0x7FF
+_IO_INCH_MAX = 0x7
+_IO_BITS_MAX = 0xF
+
+
+def _encode_instr(ins: Instr) -> int:
+    if isinstance(ins, IOInstr):
+        if ins.in_channels > _IO_INCH_MAX:
+            raise ProgramError(
+                f"IO in_channels {ins.in_channels} exceeds encodable "
+                f"range ({_IO_INCH_MAX})")
+        if ins.bits > _IO_BITS_MAX:
+            raise ProgramError(
+                f"IO bits {ins.bits} exceeds encodable range ({_IO_BITS_MAX})")
+        return (_OP_IO | ins.height << 2 | ins.width << 8
+                | ins.channels << 14 | ins.in_channels << 25
+                | ins.bits << 28)
+    if isinstance(ins, ConvInstr):
+        return (_OP_CNN | ins.height << 2 | ins.width << 8
+                | ins.features << 14 | int(ins.maxpool) << 25)
+    if ins.in_features > _FC_IN_MAX:
+        raise ProgramError(
+            f"FC in_features {ins.in_features} exceeds encodable "
+            f"range ({_FC_IN_MAX})")
+    if ins.out_features > _FC_OUT_MAX:
+        raise ProgramError(
+            f"FC out_features {ins.out_features} exceeds encodable "
+            f"range ({_FC_OUT_MAX})")
+    return (_OP_FC | ins.in_features << 14
+            | ins.out_features << 2 | int(ins.final) << 25)
+
+
 def assemble(p: Program) -> np.ndarray:
     validate(p)
-    words = []
-    for ins in p.instrs:
-        if isinstance(ins, IOInstr):
-            w = (_OP_IO | ins.height << 2 | ins.width << 8
-                 | ins.channels << 14 | (ins.bits & 0x7) << 29)
-        elif isinstance(ins, ConvInstr):
-            w = (_OP_CNN | ins.height << 2 | ins.width << 8
-                 | ins.features << 14 | int(ins.maxpool) << 25)
-        else:
-            w = (_OP_FC | min(ins.in_features, 2047) << 14
-                 | ins.out_features << 2 | int(ins.final) << 25)
-            if ins.in_features > 2047:
-                raise ProgramError("FC in_features exceeds encodable range")
-        words.append(w)
+    words = [_encode_instr(ins) for ins in p.instrs]
     out = np.zeros(MAX_INSTRUCTIONS, np.uint32)
     out[:len(words)] = np.array(words, np.uint32)
     return out
@@ -194,14 +224,16 @@ def disassemble(words: np.ndarray, s: int) -> Program:
         op = w & 0x3
         if op == _OP_IO:
             instrs.append(IOInstr(height=(w >> 2) & 0x3F, width=(w >> 8) & 0x3F,
-                                  channels=(w >> 14) & 0x7FF, bits=(w >> 29) & 0x7))
+                                  channels=(w >> 14) & 0x7FF,
+                                  in_channels=(w >> 25) & _IO_INCH_MAX,
+                                  bits=(w >> 28) & _IO_BITS_MAX))
         elif op == _OP_CNN:
             instrs.append(ConvInstr(height=(w >> 2) & 0x3F, width=(w >> 8) & 0x3F,
                                     features=(w >> 14) & 0x7FF,
                                     maxpool=bool((w >> 25) & 1)))
         else:
-            instrs.append(FCInstr(in_features=(w >> 14) & 0x7FF,
-                                  out_features=(w >> 2) & 0xF,
+            instrs.append(FCInstr(in_features=(w >> 14) & _FC_IN_MAX,
+                                  out_features=(w >> 2) & _FC_OUT_MAX,
                                   final=bool((w >> 25) & 1)))
     return Program(s=s, instrs=tuple(instrs))
 

@@ -52,6 +52,34 @@ def thermometer_encode(images: jax.Array, bits: int, channels: int) -> jax.Array
     return planes
 
 
+def thermometer_encode_packed(images: jax.Array, bits: int,
+                              channels: int) -> jax.Array:
+    """Thermometer-encode straight into packed uint32 words.
+
+    Bit-identical to ``pack_signs(thermometer_encode(...))`` but never
+    materializes the +/-1 float planes: plane i of color c is -1 (bit 1)
+    exactly when ``x_c < t_i``, and the constant +1 bias planes are bit 0,
+    so the sign bits are computed from the integer pixels directly.  This
+    is the *single* pack of the whole packed inference pipeline —
+    everything downstream consumes and produces uint32 words.
+    Returns (B, H, W, channels // 32) uint32 (channels is a multiple of
+    32 for every array mode: 256/S with S in {1, 2, 4}).
+    """
+    assert channels % binarize.PACK_WIDTH == 0, channels
+    b, h, w, cin = images.shape
+    per = channels // cin
+    levels = 2 ** bits
+    t = (jnp.arange(per, dtype=jnp.float32) + 0.5) * (levels / per)
+    x = images.astype(jnp.float32)[..., None]            # (B,H,W,Cin,1)
+    neg = (x < t).astype(jnp.uint32)                     # sign bit per plane
+    neg = neg.reshape(b, h, w, cin * per)
+    pad = channels - cin * per
+    if pad:                                              # +1 bias -> bit 0
+        neg = jnp.concatenate(
+            [neg, jnp.zeros((b, h, w, pad), neg.dtype)], axis=-1)
+    return binarize.pack_bit_lanes(neg)
+
+
 # ---------------------------------------------------------------------------
 # CONV: F x C x 2x2 stride-1 VALID, all neurons in parallel
 # ---------------------------------------------------------------------------
@@ -71,14 +99,20 @@ def conv2x2(x: jax.Array, w: jax.Array) -> jax.Array:
 
 def conv2x2_packed(x_signs: jax.Array, w_signs: jax.Array,
                    interpret: bool | None = None) -> jax.Array:
-    """Packed XNOR-popcount path via the Pallas kernel (per-image vmap)."""
+    """Packed XNOR-popcount path via the batched Pallas kernel.
+
+    The batch rides the kernel grid (weights resident across all images)
+    rather than a per-image ``jax.vmap``.  Float +/-1 in/out compat
+    wrapper — the fully packed pipeline lives in ``interpreter.
+    InferencePlan`` / ``kernels.binary_conv2x2_block``.
+    """
     c = x_signs.shape[-1]
     f = w_signs.shape[0]
     x_words = binarize.pack_signs(x_signs, axis=-1)              # (B,H,W,Cw)
     w_words = binarize.pack_signs(
         w_signs.reshape(f, 4, c), axis=-1)                       # (F,4,Cw)
-    conv = lambda img: kops.binary_conv2x2(img, w_words, c, interpret=interpret)
-    return jax.vmap(conv)(x_words).astype(jnp.float32)
+    return kops.binary_conv2x2(x_words, w_words, c,
+                               interpret=interpret).astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------

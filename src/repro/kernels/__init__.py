@@ -4,4 +4,14 @@ Layout (per repo convention):
   <name>.py -- pl.pallas_call + BlockSpec kernel
   ops.py    -- jit'd public wrappers (auto interpret on CPU)
   ref.py    -- pure-jnp oracles the kernels are tested against
+
+Inference kernels keep feature maps in the bit-packed uint32 domain
+end-to-end (the chip's all-memory-on-chip property mapped to VMEM):
+  binarize_pack        -- fused sign+pack producer (the single IO pack)
+  binary_conv2x2       -- packed conv -> int32 sums (training/reference)
+  binary_conv2x2_block -- fused conv -> threshold -> pool -> repack;
+                          packed words in, packed words out
+  xnor_matmul          -- packed FC; ``pack_out=True`` fuses sign+pack
+                          for hidden layers so only the final logits
+                          are ever unpacked
 """

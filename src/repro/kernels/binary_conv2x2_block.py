@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused conv -> threshold -> pool -> repack, all packed.
+
+BinarEye's defining property is that feature maps never leave the chip:
+every layer consumes binary data and produces binary data, with no wide
+intermediate ever crossing a memory boundary.  The seed mapping lost that
+property on TPU — ``binary_conv2x2`` wrote int32 sums to HBM, the
+comparator ran on unpacked +/-1 floats, and the next layer re-packed to
+uint32 words.  This kernel restores it: one grid step computes the 2x2
+XNOR-popcount convolution for a tile of F output neurons, applies the
+folded integer threshold comparator (``tau``/``flip``) on the in-register
+sums, optionally performs the chip's streamed 2x2/2 max-pool *in the sign
+domain* (max over +/-1 == AND of sign bits, since bit=1 encodes -1), and
+writes re-packed uint32 words.  Only packed bits ever touch HBM.
+
+Batch is a grid axis rather than a ``jax.vmap``: the grid is (F tiles,
+batch) with F outermost, so a weight tile is fetched to VMEM once and
+stays resident while the whole batch streams through it — the chip's
+LD-once / CONV-many schedule extended over frames.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.binarize import PACK_WIDTH, pack_bit_lanes
+from repro.kernels.binary_conv2x2 import accumulate_tap_popcounts
+
+
+def _conv_block_kernel(a_ref, w_ref, tau_ref, flip_ref, out_ref, *,
+                       k4: int, h: int, w: int, pool: bool):
+    """One (f-tile, frame-tile) grid step.
+
+    a_ref:    (bb, H, W, Cw) uint32 packed input maps (a tile of frames).
+    w_ref:    (bf, 4, Cw)    uint32 packed weight taps, (dy, dx) row-major.
+    tau_ref:  (1, bf) int32 comparator thresholds; flip_ref: (1, bf) int32.
+    out_ref:  (bb, Ho, Wo, bf // 32) uint32 packed output words.
+    """
+    bb = a_ref.shape[0]
+    bf = w_ref.shape[0]
+    acc = accumulate_tap_popcounts(a_ref[...], w_ref[...], h, w)
+    s = jnp.int32(k4) - 2 * acc                                # integer sums
+
+    # folded comparator, in-register: output is +1 iff (s >= tau) XOR flip;
+    # under the bit=1 <=> -1 convention the sign bit is the negation of that.
+    tau = tau_ref[0][None, None, None, :]
+    flip = flip_ref[0][None, None, None, :]
+    ge = (s >= tau).astype(jnp.int32)
+    bits = (jnp.int32(1) - jnp.bitwise_xor(ge, flip)
+            ).astype(jnp.uint32)                               # (bb,H-1,W-1,bf)
+
+    if pool:
+        # streamed 2x2/2 max-pool in the sign domain: max over +/-1 == any
+        # +1 in the window == AND of the (negative-sign) bits.
+        ho, wo = (h - 1) // 2, (w - 1) // 2
+        bits = bits[:, :ho * 2, :wo * 2, :].reshape(bb, ho, 2, wo, 2, bf)
+        bits = bits[:, :, 0] & bits[:, :, 1]
+        bits = bits[:, :, :, 0, :] & bits[:, :, :, 1, :]       # (bb, ho, wo, bf)
+
+    out_ref[...] = pack_bit_lanes(bits)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("c", "pool", "bf", "bb", "interpret"))
+def binary_conv2x2_block(a_words: jax.Array, w_words: jax.Array,
+                         tau: jax.Array, flip: jax.Array, *, c: int,
+                         pool: bool = False, bf: int = 64, bb: int = 8,
+                         interpret: bool = False) -> jax.Array:
+    """Fused packed conv layer: packed words in, packed words out.
+
+    a_words: (B, H, W, Cw) uint32 packed input feature maps (C channels).
+    w_words: (F, 4, Cw) uint32 packed weights, tap order (dy, dx) row-major.
+    tau:     (F,) int32 folded integer thresholds (s >= tau fires).
+    flip:    (F,) comparator direction (gamma < 0), bool or int.
+    c:       true channel count per tap; total dot length = 4*c.
+    pool:    apply the streamed 2x2 stride-2 max-pool before repacking.
+    bf, bb:  neuron / frame tile sizes.  VMEM at the worst chip shape
+             (32x32 map, C=256 -> Cw=8, bb=8, bf=64): packed maps are
+             tiny (bb*32 kB), but the dominant live values are the
+             int32 accumulator bb*31*31*bf*4B ~ 1.9 MB and the per-tap
+             xor/popcount intermediate bb*31*31*bf*Cw*4B ~ 15.7 MB if
+             the compiler materializes it unfused — Mosaic normally
+             fuses the popcount-reduce so the tap temporary stays
+             register-resident, but when tuning for a real TPU treat
+             acc (+ one fused tap row) as the budget and shrink bb/bf
+             first if VMEM overflows.
+    Returns (B, Ho, Wo, F // 32) uint32 — Ho = (H-1)//2 if pool else H-1.
+    """
+    b, h, w, kw = a_words.shape
+    f, taps, kw2 = w_words.shape
+    assert taps == 4 and kw == kw2, (w_words.shape, a_words.shape)
+    assert f % PACK_WIDTH == 0, (
+        f"fused packed output needs F % {PACK_WIDTH} == 0, got F={f}")
+
+    bf = min(bf, f)
+    bf = -(-bf // PACK_WIDTH) * PACK_WIDTH     # round up to whole words
+    fp = (-f) % bf
+    if fp:                                     # pad F to the tile multiple;
+        w_words = jnp.pad(w_words, ((0, fp), (0, 0), (0, 0)))
+        tau = jnp.pad(tau, (0, fp))            # padded words trimmed below
+        flip = jnp.pad(flip, (0, fp))
+    tau2 = tau.astype(jnp.int32).reshape(1, -1)
+    flip2 = flip.astype(jnp.int32).reshape(1, -1)
+    gf = w_words.shape[0] // bf
+
+    bb = min(bb, b)
+    bp = (-b) % bb
+    if bp:                                     # pad the batch to the frame
+        a_words = jnp.pad(a_words, ((0, bp), (0, 0), (0, 0), (0, 0)))
+    gb = a_words.shape[0] // bb                # tile; extra frames trimmed
+
+    ho, wo = h - 1, w - 1
+    if pool:
+        ho, wo = ho // 2, wo // 2
+    bfw = bf // PACK_WIDTH
+
+    out = pl.pallas_call(
+        functools.partial(_conv_block_kernel, k4=4 * c, h=h, w=w, pool=pool),
+        grid=(gf, gb),                          # F outermost: weights stay
+        in_specs=[                              # resident across the batch
+            pl.BlockSpec((bb, h, w, kw), lambda f_, b_: (b_, 0, 0, 0)),
+            pl.BlockSpec((bf, 4, kw), lambda f_, b_: (f_, 0, 0)),
+            pl.BlockSpec((1, bf), lambda f_, b_: (0, f_)),
+            pl.BlockSpec((1, bf), lambda f_, b_: (0, f_)),
+        ],
+        out_specs=pl.BlockSpec((bb, ho, wo, bfw),
+                               lambda f_, b_: (b_, 0, 0, f_)),
+        out_shape=jax.ShapeDtypeStruct(
+            (a_words.shape[0], ho, wo, w_words.shape[0] // PACK_WIDTH),
+            jnp.uint32),
+        interpret=interpret,
+    )(a_words, w_words, tau2, flip2)
+    return out[:b, :, :, :f // PACK_WIDTH]

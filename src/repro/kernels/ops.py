@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.core import binarize
 from repro.kernels import binarize_pack as _bp
 from repro.kernels import binary_conv2x2 as _bc
+from repro.kernels import binary_conv2x2_block as _bcb
 from repro.kernels import xnor_matmul as _xm
 
 
@@ -42,6 +43,21 @@ def binary_conv2x2(a_words: jax.Array, w_words: jax.Array, c: int, *,
     if interpret is None:
         interpret = default_interpret()
     return _bc.binary_conv2x2(a_words, w_words, c=c, interpret=interpret, **tiles)
+
+
+def binary_conv2x2_block(a_words: jax.Array, w_words: jax.Array,
+                         tau: jax.Array, flip: jax.Array, c: int, *,
+                         pool: bool = False, interpret: bool | None = None,
+                         **tiles) -> jax.Array:
+    """Fused packed conv layer: conv -> integer threshold -> pool -> repack.
+
+    (B, H, W, Cw) uint32 in, (B, Ho, Wo, F//32) uint32 out — the
+    feature map never leaves the bit-packed domain.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _bcb.binary_conv2x2_block(a_words, w_words, tau, flip, c=c,
+                                     pool=pool, interpret=interpret, **tiles)
 
 
 def binary_linear(x: jax.Array, w_signs: jax.Array, *,

@@ -22,6 +22,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.binarize import PACK_WIDTH, pack_bit_lanes
 
 
 def _xnor_matmul_kernel(a_ref, w_ref, out_ref, *, k: int, nk: int):
@@ -45,23 +48,64 @@ def _xnor_matmul_kernel(a_ref, w_ref, out_ref, *, k: int, nk: int):
         out_ref[...] = jnp.int32(k) - 2 * out_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "bk", "interpret"))
+def _xnor_matmul_pack_kernel(a_ref, w_ref, out_ref, acc_ref, *, k: int, nk: int):
+    """Fused variant: sign the final sums and emit packed uint32 words.
+
+    Accumulation runs in a VMEM scratch (the packed output words have a
+    different shape/dtype than the int32 partials); the last k step
+    applies ``sign(K - 2*acc)`` and packs 32 neurons per word, so a
+    hidden FC layer's activations never exist unpacked outside the
+    kernel.  out_ref: (bm, bn // 32) uint32.
+    """
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    w = w_ref[...]
+    x = jnp.bitwise_xor(a[:, None, :], w[None, :, :])
+    acc_ref[...] += jnp.sum(jax.lax.population_count(x).astype(jnp.int32),
+                            axis=-1)
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        s = jnp.int32(k) - 2 * acc_ref[...]               # (bm, bn) sums
+        bits = (s < 0).astype(jnp.uint32)                 # sign: bit=1 -> -1
+        out_ref[...] = pack_bit_lanes(bits)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "bk",
+                                             "pack_out", "interpret"))
 def xnor_matmul(a_words: jax.Array, w_words: jax.Array, *, k: int,
                 bm: int = 128, bn: int = 128, bk: int = 64,
-                interpret: bool = False) -> jax.Array:
+                pack_out: bool = False, interpret: bool = False) -> jax.Array:
     """Packed binary matmul.
 
     a_words: (M, Kw) uint32 packed activations (+1 -> bit0, -1 -> bit1).
     w_words: (N, Kw) uint32 packed weights.
     k:       true (unpadded) channel count; output = K - 2*popcount(xor).
-    Returns (M, N) int32.
+    pack_out: fuse the sign activation and bit-pack along N inside the
+        kernel, returning (M, N // 32) uint32 instead of (M, N) int32 —
+        the stay-binary path for hidden FC layers (requires N % 32 == 0).
+    Returns (M, N) int32, or (M, N // 32) uint32 when ``pack_out``.
+
+    The M axis doubles as the batch axis (callers flatten (B, K) frames
+    into rows), and N is the outermost grid axis, so each weight tile is
+    loaded once and serves the entire batch.
     """
     m, kw = a_words.shape
     n, kw2 = w_words.shape
     assert kw == kw2, (kw, kw2)
+    if pack_out:
+        assert n % PACK_WIDTH == 0, (
+            f"pack_out needs N % {PACK_WIDTH} == 0, got N={n}")
 
     bm = min(bm, m)
     bn = min(bn, n)
+    if pack_out:
+        bn = -(-bn // PACK_WIDTH) * PACK_WIDTH    # whole words per tile
     bk = min(bk, kw)
     # pad to tile multiples (zero words == +1 signs on both sides: no-op)
     mp, np_, kp = (-m) % bm, (-n) % bn, (-kw) % bk
@@ -71,13 +115,29 @@ def xnor_matmul(a_words: jax.Array, w_words: jax.Array, *, k: int,
         w_words = jnp.pad(w_words, ((0, np_), (0, kp)))
     gm, gn, gk = a_words.shape[0] // bm, w_words.shape[0] // bn, a_words.shape[1] // bk
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda n_, m_, k_: (m_, k_)),   # activations stream
+        pl.BlockSpec((bn, bk), lambda n_, m_, k_: (n_, k_)),   # weights: loop-invariant in m_
+    ]
+    if pack_out:
+        out = pl.pallas_call(
+            functools.partial(_xnor_matmul_pack_kernel, k=k, nk=gk),
+            grid=(gn, gm, gk),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn // PACK_WIDTH),
+                                   lambda n_, m_, k_: (m_, n_)),
+            out_shape=jax.ShapeDtypeStruct(
+                (a_words.shape[0], w_words.shape[0] // PACK_WIDTH),
+                jnp.uint32),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+            interpret=interpret,
+        )(a_words, w_words)
+        return out[:m, :n // PACK_WIDTH]
+
     out = pl.pallas_call(
         functools.partial(_xnor_matmul_kernel, k=k, nk=gk),
         grid=(gn, gm, gk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda n_, m_, k_: (m_, k_)),   # activations stream
-            pl.BlockSpec((bn, bk), lambda n_, m_, k_: (n_, k_)),   # weights: loop-invariant in m_
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda n_, m_, k_: (m_, n_)),
         out_shape=jax.ShapeDtypeStruct((a_words.shape[0], w_words.shape[0]), jnp.int32),
         interpret=interpret,

@@ -36,6 +36,44 @@ def test_assemble_roundtrip(s):
     assert q == p
 
 
+@pytest.mark.parametrize("name", sorted(networks.REGISTRY))
+def test_assemble_roundtrip_every_registry_program(name):
+    """Program memory round-trips every benchmark net exactly — in
+    particular mnist5, whose 64-wide hidden FC overflowed the original
+    4-bit out_features field."""
+    p = networks.REGISTRY[name]()
+    q = isa.disassemble(isa.assemble(p), s=p.s)
+    assert q == p
+    # the re-decoded program must still satisfy every hardware constraint
+    isa.validate(q)
+
+
+@pytest.mark.parametrize("out", [1, 15, 16, 64, 256, isa._FC_OUT_MAX])
+def test_fc_out_field_width(out):
+    """The widened FC out field holds every width the array can produce
+    (up to the full 256-channel hidden layer) without corruption."""
+    word = np.uint32(isa._OP_FC | 64 << 14 | out << 2 | 1 << 25)
+    ins = isa.disassemble(np.array([word], np.uint32), s=4).instrs[0]
+    assert isinstance(ins, isa.FCInstr)
+    assert ins.out_features == out
+    assert ins.in_features == 64 and ins.final
+
+
+def test_fc_field_range_checks_fire():
+    """assemble range-checks the FC fields before packing the word."""
+    ok = (isa.IOInstr(height=5, width=5, channels=64),
+          isa.ConvInstr(height=5, width=5, features=64),
+          isa.FCInstr(in_features=4 * 4 * 64, out_features=10, final=True))
+    isa.assemble(isa.Program(s=4, instrs=ok))  # sanity: encodable
+    with pytest.raises(isa.ProgramError, match="out_features"):
+        isa._encode_instr(isa.FCInstr(in_features=64,
+                                      out_features=isa._FC_OUT_MAX + 1,
+                                      final=True))
+    with pytest.raises(isa.ProgramError, match="in_features"):
+        isa._encode_instr(isa.FCInstr(in_features=isa._FC_IN_MAX + 1,
+                                      out_features=10, final=True))
+
+
 def test_rejects_bad_s():
     with pytest.raises(isa.ProgramError):
         isa.validate(isa.Program(s=3, instrs=networks.cifar9(1).instrs))

@@ -1,0 +1,140 @@
+"""InferencePlan: full-program packed pipeline vs the float reference.
+
+The acceptance property of the packed-domain refactor: for *every*
+benchmark program in ``networks.REGISTRY`` the compiled plan — single
+pack at the IO encoding, fused packed conv stages, fused packed hidden
+FCs, int32 logits at the final FC — agrees bit-exactly with the float
++/-1 reference interpreter, and no unpack/repack happens between layers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binarize
+from repro.core.chip import interpreter, isa, networks, neuron_array as na
+
+
+def _images(program, b=2, seed=0):
+    io = program.instrs[0]
+    return jax.random.randint(jax.random.PRNGKey(seed),
+                              (b, io.height, io.width, io.in_channels),
+                              0, 2 ** io.bits)
+
+
+def _trained_folded(program, seed=0):
+    """Folded params with realistic (nonzero) BN state."""
+    key = jax.random.PRNGKey(seed)
+    params = interpreter.init_params(key, program)
+    _, params = interpreter.forward_train(params, program,
+                                          _images(program, b=4, seed=1))
+    return interpreter.fold_params(params, program)
+
+
+def test_thermometer_encode_packed_bit_exact():
+    img = jax.random.randint(jax.random.PRNGKey(0), (2, 6, 7, 3), 0, 128)
+    want = binarize.pack_signs(na.thermometer_encode(img, 7, 64), axis=-1)
+    got = na.thermometer_encode_packed(img, 7, 64)
+    assert got.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("name", sorted(networks.REGISTRY))
+def test_plan_bit_exact_on_every_registry_program(name):
+    program = networks.REGISTRY[name]()
+    folded = _trained_folded(program)
+    packed = interpreter.pack_folded(folded)
+    imgs = _images(program, b=2, seed=7)
+
+    logits_ref, labels_ref = interpreter.forward_infer(folded, program, imgs,
+                                                       use_kernels=False)
+    plan = interpreter.compile_plan(program)
+    logits_pk, labels_pk = plan.forward(packed, imgs, interpret=True)
+
+    np.testing.assert_array_equal(np.asarray(logits_ref),
+                                  np.asarray(logits_pk))
+    np.testing.assert_array_equal(np.asarray(labels_ref),
+                                  np.asarray(labels_pk))
+
+
+def test_forward_infer_kernels_routes_through_plan():
+    """use_kernels=True accepts both float-folded and packed artifacts."""
+    program = networks.mnist5()
+    folded = _trained_folded(program, seed=3)
+    imgs = _images(program, b=3, seed=11)
+    ref_out = interpreter.forward_infer(folded, program, imgs,
+                                        use_kernels=False)
+    for art in (folded, interpreter.pack_folded(folded)):
+        got = interpreter.forward_infer(art, program, imgs,
+                                        use_kernels=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref_out[0]),
+                                      np.asarray(got[0]))
+        np.testing.assert_array_equal(np.asarray(ref_out[1]),
+                                      np.asarray(got[1]))
+
+
+def test_no_unpack_or_repack_inside_plan_forward(monkeypatch):
+    """The packed pipeline never leaves the bit domain: with the artifact
+    packed up front, a pack_signs/unpack_signs call during the forward is
+    a bug (single pack at IO, single int32 readout at the final FC)."""
+    program = networks.mnist5()        # exercises conv AND hidden-FC stages
+    folded = _trained_folded(program, seed=5)
+    packed = interpreter.pack_folded(folded)
+    plan = interpreter.compile_plan(program)
+    imgs = _images(program, b=2, seed=2)
+
+    def boom(*a, **k):
+        raise AssertionError("float-domain (re)pack inside packed plan")
+
+    monkeypatch.setattr(binarize, "pack_signs", boom)
+    monkeypatch.setattr(binarize, "unpack_signs", boom)
+    logits, labels = plan.forward(packed, imgs, interpret=True)
+    assert logits.shape[0] == 2 and labels.shape == (2,)
+
+
+def test_packed_artifact_layout():
+    """fold_params(packed=True) emits the documented deployment layout."""
+    program = networks.mnist5()
+    key = jax.random.PRNGKey(0)
+    params = interpreter.init_params(key, program)
+    packed = interpreter.fold_params(params, program, packed=True)
+
+    geoms = [g for g in isa.layer_geometry(program)
+             if isinstance(g[0], isa.ConvInstr)]
+    assert len(packed["conv"]) == len(geoms)
+    for p, (ins, _h, _w, c, *_r) in zip(packed["conv"], geoms):
+        cw = -(-c // binarize.PACK_WIDTH)
+        assert p["w_words"].shape == (ins.features, 4, cw)
+        assert p["w_words"].dtype == jnp.uint32
+        assert p["tau"].shape == (ins.features,) and p["tau"].dtype == jnp.int32
+        assert p["flip"].shape == (ins.features,)
+    fcs = program.fc_instrs
+    for p, ins in zip(packed["fc"], fcs):
+        kw = -(-ins.in_features // binarize.PACK_WIDTH)
+        assert p["w_words"].shape == (ins.out_features, kw)
+        assert p["w_words"].dtype == jnp.uint32
+
+
+def test_plan_is_cached_and_static():
+    program = networks.cifar9(4)
+    plan1 = interpreter.compile_plan(program)
+    plan2 = interpreter.compile_plan(networks.cifar9(4))
+    assert plan1 is plan2                       # geometry resolved once
+    convs = [s for s in plan1.stages
+             if isinstance(s, interpreter._ConvStage)]
+    assert len(convs) == 8
+    assert [s.pool for s in convs] == [False, False, False, True,
+                                       False, True, False, True]
+    fc = plan1.stages[-1]
+    assert fc.final and not fc.pack_out         # logits stay int32
+
+
+def test_plan_make_fn_jits():
+    program = networks.mnist5()
+    folded = _trained_folded(program, seed=9)
+    packed = interpreter.pack_folded(folded)
+    plan = interpreter.compile_plan(program)
+    fn = plan.make_fn(interpret=True)
+    logits, labels = fn(packed, _images(program, b=2, seed=4))
+    assert logits.shape == (2, 10) and labels.shape == (2,)

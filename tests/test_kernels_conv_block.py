@@ -1,0 +1,148 @@
+"""Fused binary_conv2x2_block kernel vs the float reference chain.
+
+The oracle is the unfused float path the chip model trains against:
+conv sums -> folded comparator -> (optional) 2x2/2 max-pool -> pack.
+The fused kernel must reproduce its packed output words bit-exactly for
+every array width mode S in {1, 2, 4}, odd and even map sizes, and
+pool/no-pool — plus the xnor_matmul pack_out fused sign+pack.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize
+from repro.core.chip import neuron_array as na
+from repro.kernels import ref
+from repro.kernels.binary_conv2x2 import binary_conv2x2
+from repro.kernels.binary_conv2x2_block import binary_conv2x2_block
+from repro.kernels.xnor_matmul import xnor_matmul
+
+
+def _rand_signs(rng, shape):
+    return rng.choice(np.array([-1.0, 1.0], np.float32), size=shape)
+
+
+def _pack_weights(w_signs):
+    f, _, _, c = w_signs.shape
+    return binarize.pack_signs(jnp.asarray(w_signs).reshape(f, 4, c), axis=-1)
+
+
+def _oracle_words(a, wgt, tau, flip, pool):
+    """Float reference chain, batched: packed words of the layer output."""
+    s = jnp.stack([ref.binary_conv2x2_ref(jnp.asarray(a[i]), jnp.asarray(wgt))
+                   for i in range(a.shape[0])]).astype(jnp.float32)
+    act = binarize.threshold_activation(s, jnp.asarray(tau), jnp.asarray(flip))
+    if pool:
+        act = na.maxpool2x2(act)
+    return binarize.pack_signs(act, axis=-1)
+
+
+def _run_case(rng, b, h, w, c, f, pool, **tiles):
+    a = _rand_signs(rng, (b, h, w, c))
+    wgt = _rand_signs(rng, (f, 2, 2, c))
+    tau = (rng.normal(size=f) * 3).astype(np.float32)
+    flip = rng.integers(0, 2, f).astype(bool)
+    a_words = binarize.pack_signs(jnp.asarray(a), axis=-1)
+    got = binary_conv2x2_block(
+        a_words, _pack_weights(wgt),
+        binarize.threshold_to_int(jnp.asarray(tau)), jnp.asarray(flip),
+        c=c, pool=pool, interpret=True, **tiles)
+    want = _oracle_words(a, wgt, tau, flip, pool)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# the chip's three array width modes: F = C = 256/S, S in {1, 2, 4}
+MODE_CASES = [
+    (2, 8, 8, 64, 64),       # S=4
+    (2, 9, 7, 128, 128),     # S=2, odd/non-square map
+    (1, 6, 6, 256, 256),     # S=1, full array
+    (3, 5, 8, 40, 64),       # C not a multiple of 32 (packed padding)
+    (2, 32, 32, 64, 64),     # full-size chip map
+]
+
+
+@pytest.mark.parametrize("pool", [False, True])
+@pytest.mark.parametrize("b,h,w,c,f", MODE_CASES)
+def test_fused_block_matches_float_reference(b, h, w, c, f, pool):
+    rng = np.random.default_rng(h * 1000 + w * 100 + c + f + pool)
+    _run_case(rng, b, h, w, c, f, pool)
+
+
+@pytest.mark.parametrize("bf", [32, 64, 128])
+def test_fused_block_f_tile_invariance(bf):
+    rng = np.random.default_rng(5)
+    _run_case(rng, 2, 10, 10, 64, 128, True, bf=bf)
+
+
+@settings(max_examples=10, deadline=None)
+@given(h=st.integers(3, 12), w=st.integers(3, 12), c=st.integers(1, 70),
+       pool=st.sampled_from([False, True]), seed=st.integers(0, 2**31 - 1))
+def test_fused_block_property_random(h, w, c, pool, seed):
+    rng = np.random.default_rng(seed)
+    _run_case(rng, 2, h, w, c, 32, pool, bf=32)
+
+
+def test_fused_block_integer_threshold_edges():
+    """Exactly-integer and extreme taus: ceil quantization can't disagree
+    with the float comparator on integer sums."""
+    rng = np.random.default_rng(9)
+    b, h, w, c, f = 2, 6, 6, 32, 32
+    a = _rand_signs(rng, (b, h, w, c))
+    wgt = _rand_signs(rng, (f, 2, 2, c))
+    # sums live in [-4c, 4c]; cover ties (integer tau), just-off-integer
+    # taus, and never/always-fire extremes
+    tau = np.array([0.0, 1.0, -1.0, 0.5, -0.5, 2.0 ** 20, -2.0 ** 20, 3.999]
+                   * (f // 8), np.float32)
+    flip = (np.arange(f) % 2).astype(bool)
+    a_words = binarize.pack_signs(jnp.asarray(a), axis=-1)
+    got = binary_conv2x2_block(
+        a_words, _pack_weights(wgt),
+        binarize.threshold_to_int(jnp.asarray(tau)), jnp.asarray(flip),
+        c=c, pool=False, interpret=True)
+    want = _oracle_words(a, wgt, tau, flip, False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batched_conv_matches_per_image():
+    """Batched-grid binary_conv2x2 == the same kernel run per image."""
+    rng = np.random.default_rng(3)
+    b, h, w, c, f = 4, 7, 9, 48, 24
+    a = _rand_signs(rng, (b, h, w, c))
+    wgt = _rand_signs(rng, (f, 2, 2, c))
+    a_words = binarize.pack_signs(jnp.asarray(a), axis=-1)
+    w_words = _pack_weights(wgt)
+    got = binary_conv2x2(a_words, w_words, c=c, bf=16, interpret=True)
+    for i in range(b):
+        want = binary_conv2x2(a_words[i], w_words, c=c, bf=16, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# xnor_matmul pack_out: fused sign+pack for hidden FC layers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,bk", [(3, 64, 32, 64), (5, 300, 64, 2),
+                                      (17, 2048, 128, 8), (1, 33, 96, 1)])
+def test_xnor_pack_out_matches_oracle(m, k, n, bk):
+    """Multi-k-block accumulation in scratch + fused sign+pack."""
+    rng = np.random.default_rng(m * 7 + k + n)
+    a = _rand_signs(rng, (m, k))
+    wgt = _rand_signs(rng, (n, k))
+    aw = binarize.pack_signs(jnp.asarray(a), axis=-1)
+    ww = binarize.pack_signs(jnp.asarray(wgt), axis=-1)
+    got = xnor_matmul(aw, ww, k=k, bk=bk, pack_out=True, interpret=True)
+    s = ref.xnor_matmul_ref(jnp.asarray(a), jnp.asarray(wgt))
+    want = binarize.pack_signs(binarize.hard_sign(s.astype(jnp.float32)),
+                               axis=-1)
+    assert got.shape == (m, n // 32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_xnor_pack_out_rejects_partial_words():
+    rng = np.random.default_rng(1)
+    aw = binarize.pack_signs(jnp.asarray(_rand_signs(rng, (2, 32))), axis=-1)
+    ww = binarize.pack_signs(jnp.asarray(_rand_signs(rng, (33, 32))), axis=-1)
+    with pytest.raises(AssertionError, match="pack_out"):
+        xnor_matmul(aw, ww, k=32, pack_out=True, interpret=True)
