@@ -10,10 +10,16 @@ lowers through Mosaic):
    path (per-image ``jax.vmap`` conv kernel + float comparator + repack
    at every layer boundary) on a full benchmark program — this is the
    end-to-end win of keeping feature maps bit-packed;
-3. frames/sec of the deployed plan, the serving-throughput headline.
+3. frames/sec of the deployed plan, the serving-throughput headline;
+4. frames/sec through the chip-tier serving subsystem (``ChipServer``):
+   the same packed plan behind the request queue / static-batch
+   scheduler, single-program and with two programs resident (S-mode
+   multi-program batching) — and, when more than one device is visible
+   (e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``), over
+   the sharded serving mesh.
 
 Results are written to ``BENCH_kernels.json`` so CI keeps a perf
-trajectory across PRs.  Exit 0 iff both paths are bit-exact vs their
+trajectory across PRs.  Exit 0 iff all paths are bit-exact vs their
 oracles.
 """
 
@@ -157,11 +163,77 @@ def _bench_pipeline(results):
     return ok, speedup
 
 
+def _bench_serve(results):
+    """Serving-layer throughput: the packed plan behind the scheduler.
+
+    Artifacts and synthetic frame streams come from the serving driver's
+    own helpers (``launch.chip_serve``) so the bench measures exactly the
+    admission path the driver serves.
+    """
+    from repro.distributed import sharding
+    from repro.launch import chip_serve
+    from repro.serving import ChipServer
+
+    batch, n_frames = 8, 32
+    progs = {"mnist5": networks.mnist5(),
+             "wake": networks.mnist5(classes=2)}
+    arts, frames, oracle = {}, {}, {}
+    for i, (name, prog) in enumerate(progs.items()):
+        arts[name] = chip_serve.build_artifact(prog, seed=10 + i,
+                                               warm_bn=True)
+        frames[name] = chip_serve.frame_stream(prog, n_frames, seed=20 + i)
+        plan = interpreter.compile_plan(prog)
+        oracle[name] = np.asarray(
+            jax.jit(lambda pk, im, plan=plan: plan.forward(pk, im)[1])(
+                arts[name], jnp.asarray(frames[name])))
+
+    def serve(names, label, mesh=None):
+        server = ChipServer({n: progs[n] for n in names},
+                            {n: arts[n] for n in names},
+                            batch=batch, mesh=mesh)
+        for n in names:                        # warm the compile caches
+            server.submit_many(n, frames[n][:batch])
+        server.drain()
+        t0 = time.perf_counter()
+        for i in range(n_frames):              # interleaved arrival
+            for n in names:
+                server.submit(n, frames[n][i])
+        res = server.drain()
+        dt = time.perf_counter() - t0
+        per = {n: [] for n in names}
+        for r in sorted(res, key=lambda r: r.rid):   # per-program FIFO
+            per[r.program].append(r.label)
+        ok = all(np.array_equal(np.array(per[n]), oracle[n][:len(per[n])])
+                 for n in names)
+        fps = len(res) / dt
+        print(f"{label:24s}: {fps:10,.0f} frames/s "
+              f"({len(res)} frames, {dt*1e3:.0f} ms, bit-exact={ok})")
+        return fps, ok
+
+    print(f"\n== Chip-tier serving (batch={batch}, {jax.device_count()} "
+          "device(s)) ==")
+    fps_1, ok_1 = serve(["mnist5"], "single program")
+    fps_m, ok_m = serve(list(progs), "two programs resident")
+    results["serve_frames_per_s"] = round(fps_1, 1)
+    results["serve_frames_per_s_multi"] = round(fps_m, 1)
+    results["serve_batch"] = batch
+    ok = ok_1 and ok_m
+    if jax.device_count() > 1:
+        mesh = sharding.serve_mesh()
+        fps_s, ok_s = serve(["mnist5"],
+                            f"sharded x{mesh.devices.size}", mesh=mesh)
+        results["serve_frames_per_s_sharded"] = round(fps_s, 1)
+        results["serve_devices"] = int(mesh.devices.size)
+        ok = ok and ok_s
+    return ok
+
+
 def run(csv: bool = True):
     results = {"backend": jax.default_backend()}
     ok_mm = _bench_matmul(results)
     ok_pipe, speedup = _bench_pipeline(results)
-    ok = ok_mm and ok_pipe
+    ok_serve = _bench_serve(results)
+    ok = ok_mm and ok_pipe and ok_serve
 
     with open(BENCH_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

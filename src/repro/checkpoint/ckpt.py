@@ -50,6 +50,29 @@ def save(path: str, state: Any, step: Optional[int] = None) -> None:
     os.replace(tmpm, path + ".json")
 
 
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """Version-portable mesh constructor for the restore-after-fault path.
+
+    A job restarted after a fault rebuilds its mesh on whatever topology
+    survived and restores the latest checkpoint onto it.  ``jax.make_mesh``
+    grew an ``axis_types`` kwarg (and ``jax.sharding.AxisType``) only in
+    newer JAX releases; restore code that reached for those crashed the
+    recovery itself on older runtimes.  This helper uses only the Mesh
+    constructor every supported version has, so rebuilding the mesh can
+    never be the step that kills a restart.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = 1
+    for s in axis_shapes:
+        n *= int(s)
+    if n > len(devices):
+        raise ValueError(
+            f"mesh {tuple(axis_shapes)} needs {n} devices, "
+            f"only {len(devices)} available after restart")
+    arr = np.array(devices[:n], dtype=object).reshape(tuple(axis_shapes))
+    return jax.sharding.Mesh(arr, tuple(axis_names))
+
+
 def restore(path: str, state_like: Any, mesh=None, specs=None) -> Any:
     """Restore into the structure of ``state_like``; re-shard onto ``mesh``.
 

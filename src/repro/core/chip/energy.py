@@ -153,3 +153,61 @@ def analyze_net(p: isa.Program, f_hz: float = F_EMIN) -> NetReport:
 def peak_gops(p: isa.Program, f_hz: float = F_MAX) -> float:
     """Best layer throughput at f_hz (paper's Performance [GOPS] row)."""
     return max(l.gops(f_hz) for l in analyze_program(p) if l.kind == "cnn")
+
+
+# ---------------------------------------------------------------------------
+# Serving-mix accounting: the chip time-shared across resident programs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeReport:
+    """Energy/throughput bill for a multi-program serving mix.
+
+    The chip's S-mode recombination lets several programs stay resident
+    (each with its own width mode); serving interleaves them on the one
+    physical array, so the mix-level figures are frame-weighted over the
+    per-program :class:`NetReport`s: energy adds, time adds, throughput is
+    the harmonic composition.  ``frames`` may include padding frames a
+    static-batch scheduler burned — they cost energy but aren't *served*,
+    which is exactly how the µJ per *served* frame should bill them.
+    """
+    frames: dict                      # program name -> served frame count
+    padded: dict                      # program name -> padding frames burned
+    reports: dict                     # program name -> NetReport
+    uj_per_frame: float               # I2L energy / served frame, incl. pad
+    frames_per_s: float               # served frames/s at the analysis f_hz
+    power_w: float                    # average power over the mix
+
+    @property
+    def total_frames(self) -> int:
+        return sum(self.frames.values())
+
+
+def serve_report(programs: dict, frames: dict, padded: dict | None = None,
+                 f_hz: float = F_EMIN,
+                 reports: dict | None = None) -> ServeReport:
+    """Bill a serving mix: ``programs``/``frames`` keyed by program name.
+
+    Returns the frame-weighted µJ/frame and frames/s of running
+    ``frames[name]`` inferences of each program (plus ``padded[name]``
+    wasted static-batch slots) back-to-back on one chip at ``f_hz``.
+    Pass precomputed ``reports`` ({name: NetReport} at the same ``f_hz``)
+    to skip re-analysis — the per-program reports are static, so a
+    serving loop polling its stats shouldn't rebuild them every call.
+    """
+    padded = dict(padded or {})
+    if reports is None:
+        reports = {n: analyze_net(p, f_hz) for n, p in programs.items()}
+    served = sum(frames.get(n, 0) for n in programs)
+    burned = {n: frames.get(n, 0) + padded.get(n, 0) for n in programs}
+    energy_j = sum(burned[n] * reports[n].i2l_energy_per_inference
+                   for n in programs)
+    time_s = sum(burned[n] / reports[n].inferences_per_s for n in programs)
+    return ServeReport(
+        frames={n: frames.get(n, 0) for n in programs},
+        padded={n: padded.get(n, 0) for n in programs},
+        reports=reports,
+        uj_per_frame=(energy_j / served * 1e6) if served else 0.0,
+        frames_per_s=(served / time_s) if time_s else 0.0,
+        power_w=(energy_j / time_s) if time_s else 0.0,
+    )

@@ -166,6 +166,15 @@ def _is_packed_artifact(folded) -> bool:
     return bool(stages) and "w_words" in stages[0]
 
 
+def ensure_packed(artifact):
+    """Admission helper: accept either artifact form, return the packed one.
+
+    The public seam for consumers outside this module (the serving layer
+    admits both float-folded and packed artifacts).
+    """
+    return artifact if _is_packed_artifact(artifact) else pack_folded(artifact)
+
+
 # ---------------------------------------------------------------------------
 # Compiled inference plan: the packed-domain pipeline
 # ---------------------------------------------------------------------------
@@ -245,6 +254,39 @@ class InferencePlan:
             return self.forward(packed, images, interpret=interpret)
         return fn
 
+    def make_serve_fn(self, mesh=None, donate_frames: bool = False,
+                      interpret: bool | None = None):
+        """Serving entry point: jit'd (packed, frames) -> (logits, labels).
+
+        The deployment-side twin of :meth:`make_fn`, with two extra knobs
+        the offline path doesn't need:
+
+        * ``mesh`` — a 1-axis device mesh (see ``distributed.sharding.
+          serve_mesh``).  The packed artifact is kept fully replicated
+          (one weight replica per device — the chip's LD-once schedule,
+          per device) and the frame batch is scattered on the batch axis
+          with ``shard_map``; each device runs the whole packed pipeline
+          on its frame shard.  The batch size must be divisible by the
+          mesh's device count.  A 1-device mesh (or ``None``) degrades
+          to a plain jit.
+        * ``donate_frames`` — donate the streamed frame buffer to the
+          computation; a continuous serving loop re-stages frames every
+          dispatch and never reads a dispatched buffer again, so the
+          runtime may reuse it in place (a no-op on backends without
+          buffer donation).
+        """
+        fwd = lambda packed, frames: self.forward(packed, frames,
+                                                  interpret=interpret)
+        if mesh is not None and mesh.devices.size > 1:
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed import context as dctx
+            axis = mesh.axis_names[0]
+            fwd = dctx.shard_map(fwd, mesh=mesh,
+                                 in_specs=(P(), P(axis)),
+                                 out_specs=(P(axis), P(axis)))
+        donate = (1,) if donate_frames else ()
+        return jax.jit(fwd, donate_argnums=donate)
+
 
 @functools.lru_cache(maxsize=64)
 def compile_plan(program: isa.Program) -> InferencePlan:
@@ -278,8 +320,7 @@ def forward_infer(folded, program: isa.Program, images: jax.Array,
     the float +/-1 reference path the plan is tested bit-exact against.
     """
     if use_kernels:
-        packed = folded if _is_packed_artifact(folded) else pack_folded(folded)
-        return compile_plan(program).forward(packed, images,
+        return compile_plan(program).forward(ensure_packed(folded), images,
                                              interpret=interpret)
 
     ci = fi = 0

@@ -195,3 +195,60 @@ def constrain(x, logical: tuple):
 def to_named(mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Chip-tier serving: plan-aware specs for InferencePlan execution
+# ---------------------------------------------------------------------------
+# The serving data-parallel layout mirrors the chip's LD-once/CONV-many
+# schedule, lifted one level: every device holds a full replica of the
+# packed deployment artifact (uint32 weight words + int32 thresholds — the
+# SRAM contents), and the frame batch is scattered on the batch axis.
+# Weights move to a device once; frames stream through.
+
+SERVE_AXIS = "frames"
+
+
+def serve_mesh(devices=None, axis: str = SERVE_AXIS):
+    """1-axis serving mesh over ``devices`` (default: all local devices).
+
+    Degrades gracefully to a 1-device mesh on CPU; under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (or on a real
+    multi-chip host) the same call yields an N-way frame-scatter mesh.
+    """
+    import numpy as np
+    devs = list(jax.devices()) if devices is None else list(devices)
+    return jax.sharding.Mesh(np.array(devs, dtype=object), (axis,))
+
+
+def plan_serve_specs(mesh):
+    """(artifact_spec, frames_spec, out_spec) for a sharded InferencePlan.
+
+    The packed artifact is replicated (``P()`` matches every leaf of the
+    {conv: [...], fc: [...]} pytree as a spec prefix); frames and the
+    (logits, labels) outputs are split on the leading batch axis.
+    """
+    axis = mesh.axis_names[0]
+    return P(), P(axis), P(axis)
+
+
+def replicate_artifact(mesh, packed):
+    """Place one full packed-weight replica on every device of ``mesh``."""
+    art_spec, _, _ = plan_serve_specs(mesh)
+    s = NamedSharding(mesh, art_spec)
+    return jax.tree.map(lambda x: jax.device_put(x, s), packed)
+
+
+def scatter_frames(mesh, frames):
+    """Scatter a frame batch over the serving mesh's batch axis.
+
+    The leading dim must divide the mesh size (the serving scheduler pads
+    its static batches to guarantee this).
+    """
+    _, frame_spec, _ = plan_serve_specs(mesh)
+    n = mesh.devices.size
+    if frames.shape[0] % n:
+        raise ValueError(
+            f"frame batch {frames.shape[0]} not divisible by "
+            f"{n}-device serving mesh")
+    return jax.device_put(frames, NamedSharding(mesh, frame_spec))

@@ -66,24 +66,31 @@ def _shifted(x, shift_state):
     return jnp.concatenate([prev, x[:, :-1]], axis=1)
 
 
-_LA_CLAMP = -20.0   # exp(20)=4.9e8; channels decayed below e^-20 are dead
-
-
 def _wkv_chunked(rh, kh, vh, wh, u, S0, chunk: int):
     """GLA-style chunked WKV: identical math to the per-token scan, but the
     (B,H,hs,hs) state round-trips HBM once per CHUNK instead of once per
-    token, and the intra-chunk part runs as (C,C) masked matmuls on the MXU.
+    token, and the chunk-crossing terms run as (C,C) masked matmuls on the
+    MXU.
 
     Derivation (per channel i, decay applied to history at step t):
         S_t = diag(w_t) S_{t-1} + k_t (x) v_t
         y_t = r_t . S_{t-1} + (r_t*u*k_t).sum v_t
-    With P_t = prod_{s<=t} w_s (la = cumsum log w), r~_t = r_t * P_{t-1},
-    k~_s = k_s * exp(-la_s):
-        y      = r~ @ S_in + ((r~ @ k~^T) o M_strict) @ V + bonus-diag
+    With P_t = prod_{s<=t} w_s (la = cumsum log w), r~_t = r_t * P_{t-1}:
+        y      = r~ @ S_in + intra-chunk causal term + bonus-diag
         S_out  = P_last o S_in + sum_s exp(la_last - la_s) k_s (x) v_s
-    exp(-la) is clamped at exp(-_LA_CLAMP): only channels whose history has
-    decayed below e^-20 are affected (verified vs the scan oracle in
-    tests/test_rwkv_chunked.py).
+    The intra-chunk pair (c, s<c) needs exp(la_{c-1} - la_s) per channel.
+    The factored form r~ @ (k exp(-la))^T overflows fp32 once a channel
+    decays past e^-88 within a chunk (the seed clamped la at -20, which
+    made strongly-decayed channels *wrong*, not just clamped); instead the
+    pairwise exponent la_{c-1,i} - la_{s,i} <= 0 is formed directly and
+    masked to s < c before the exp, so every factor is <= 1 and the
+    chunked path matches the per-token scan on any decay range (verified
+    in tests/test_rwkv_chunked.py).  Cost of exactness: the intra-chunk
+    term materializes a (B,H,C,C,hs) decay tensor per chunk instead of a
+    (C,C) matmul — acceptable at the chunk sizes used here (<= 64); the
+    known cheaper-at-scale form is FLA-style secondary sub-chunking
+    (factored matmuls rebased at sub-chunk boundaries, exact einsum only
+    within a sub-chunk), queued in ROADMAP.
     """
     b, s, nh, hs = rh.shape
     n = s // chunk
@@ -95,28 +102,31 @@ def _wkv_chunked(rh, kh, vh, wh, u, S0, chunk: int):
     # wc = exp(-exp(wraw)) in (0,1); log w <= 0, floored against log(0)
     logw = jnp.log(jnp.maximum(wc, 1e-30))                 # (n,B,H,C,hs) <= 0
     la = jnp.cumsum(logw, axis=3)                          # cumulative decay
-    la = jnp.maximum(la, _LA_CLAMP)
     la_prev = jnp.concatenate([jnp.zeros_like(la[..., :1, :]),
                                la[..., :-1, :]], axis=3)   # la_{t-1}
-    r_tld = rc_ * jnp.exp(la_prev)                         # r~
-    k_tld = kc * jnp.exp(-la)                              # k~
+    r_tld = rc_ * jnp.exp(la_prev)                         # r~ (factors <= 1)
     k_out = kc * jnp.exp(la[..., -1:, :] - la)             # for S_out (<=1)
     p_last = jnp.exp(la[..., -1, :])                       # (n,B,H,hs)
 
-    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), -1)
 
     def body(S, inp):
-        r_t, k_t, v_t, k_o, p_l, r_raw, k_raw = inp
+        r_t, v_t, k_o, p_l, r_raw, k_raw, la_c, la_p = inp
         y_state = jnp.einsum("bhci,bhij->bhcj", r_t, S)
-        scores = jnp.einsum("bhci,bhsi->bhcs", r_t, k_t) * mask[None, None]
+        # exact per-pair decay exp(la_{c-1,i} - la_{s,i}), masked to s < c
+        # pre-exp so the exponent is always <= 0 (no overflow, no clamp)
+        diff = la_p[..., :, None, :] - la_c[..., None, :, :]  # (B,H,C,S,hs)
+        decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff,
+                                  -jnp.inf))
+        scores = jnp.einsum("bhci,bhcsi,bhsi->bhcs", r_raw, decay, k_raw)
         y_intra = jnp.einsum("bhcs,bhsj->bhcj", scores, v_t)
         y_bonus = jnp.einsum("bhci,bhci->bhc", r_raw * u[None, :, None, :],
                              k_raw)[..., None] * v_t
         S = p_l[..., :, None] * S + jnp.einsum("bhci,bhcj->bhij", k_o, v_t)
         return S, y_state + y_intra + y_bonus
 
-    S, ys = jax.lax.scan(body, S0, (r_tld, k_tld, vc, k_out, p_last,
-                                    rc_, kc))
+    S, ys = jax.lax.scan(body, S0, (r_tld, vc, k_out, p_last,
+                                    rc_, kc, la, la_prev))
     y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, nh, hs)  # (B,S,H,hs)
     return S, y
 

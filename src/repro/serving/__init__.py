@@ -1,0 +1,13 @@
+"""Chip-tier serving: multi-program static-batch execution of InferencePlans.
+
+See :mod:`repro.serving.scheduler` for the S-mode batching model and
+``docs/serving.md`` for the chip analogy.
+"""
+
+from repro.serving.scheduler import (  # noqa: F401
+    ChipServer,
+    FrameQueue,
+    FrameRequest,
+    FrameResult,
+    ServeStats,
+)

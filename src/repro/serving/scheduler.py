@@ -1,0 +1,258 @@
+"""Chip-tier serving scheduler: S-mode multi-program static batching.
+
+BinarEye's serving story (paper Sec. IV): frames stream in continuously
+and the chip recombines its 16 sub-arrays across programmable network
+widths S in {1, 2, 4} — several *programs* can stay resident (weights in
+SRAM, instructions in the 16-slot program memory) and the array is
+re-pointed per batch, trading energy for accuracy per task.  This module
+is the TPU analogue of that controller:
+
+* :class:`FrameQueue` — per-program FIFO lanes with a round-robin
+  dispatch pointer.  A dispatch is always single-program (the array runs
+  one instruction stream at a time), fairness comes from rotating the
+  pointer across lanes with pending frames — no resident program starves.
+* :class:`ChipServer` — holds the resident set: per program a compiled
+  :class:`~repro.core.chip.interpreter.InferencePlan`, its packed
+  deployment artifact (the SRAM contents), and a jit'd serve function.
+  Each :meth:`ChipServer.step` pulls one static batch from the queue,
+  pads it to the fixed batch size (the chip's always-on pipeline doesn't
+  idle; padding slots burn energy and are billed), runs the packed
+  pipeline, and returns per-request results.
+
+Multi-device: pass ``mesh`` (see ``distributed.sharding.serve_mesh``) to
+replicate every program's packed weights per device and scatter the frame
+batch on the batch axis via ``shard_map`` — the LD-once/CONV-many
+schedule lifted to the device level.  Single device degrades to plain jit.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chip import energy, interpreter, isa
+from repro.distributed import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameRequest:
+    """One frame awaiting inference under a resident program."""
+    rid: int                  # server-global request id (arrival order)
+    program: str              # resident program name
+    frame: Any                # (H, W, C) integer image
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameResult:
+    rid: int
+    program: str
+    label: int
+    logits: np.ndarray
+    dispatch: int             # index of the static batch that served it
+
+
+class FrameQueue:
+    """Per-program FIFO lanes + round-robin dispatch across non-empty lanes.
+
+    The fairness contract (property-tested in tests/test_chip_serve.py):
+    a lane is never dispatched twice while another lane has been waiting
+    non-empty the whole time — the pointer advances past each served lane
+    and only skips lanes that are empty at their turn.
+    """
+
+    def __init__(self, programs: Iterable[str]):
+        self._order: List[str] = list(programs)
+        if not self._order:
+            raise ValueError("FrameQueue needs at least one resident program")
+        if len(set(self._order)) != len(self._order):
+            raise ValueError(f"duplicate program names: {self._order}")
+        self._lanes: Dict[str, collections.deque] = {
+            name: collections.deque() for name in self._order}
+        self._rr = 0
+
+    def submit(self, req: FrameRequest) -> None:
+        if req.program not in self._lanes:
+            raise KeyError(
+                f"program {req.program!r} not resident "
+                f"(have {self._order})")
+        self._lanes[req.program].append(req)
+
+    def pending(self, program: Optional[str] = None) -> int:
+        if program is not None:
+            return len(self._lanes[program])
+        return sum(len(q) for q in self._lanes.values())
+
+    def __len__(self) -> int:
+        return self.pending()
+
+    def next_batch(self, capacity: int) -> Optional[Tuple[str, List[FrameRequest]]]:
+        """Up to ``capacity`` requests from the next non-empty lane in
+        round-robin order; ``None`` once fully drained."""
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        n = len(self._order)
+        for i in range(n):
+            name = self._order[(self._rr + i) % n]
+            lane = self._lanes[name]
+            if lane:
+                self._rr = (self._rr + i + 1) % n
+                take = [lane.popleft()
+                        for _ in range(min(capacity, len(lane)))]
+                return name, take
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """Host-side counters + the chip-model bill for what was served."""
+    served: Dict[str, int]            # program -> frames served
+    padded: Dict[str, int]            # program -> padding slots burned
+    dispatches: int
+    host_wall_s: float                # wall time inside dispatches
+    host_frames_per_s: float
+    chip: energy.ServeReport          # µJ/frame, frames/s, power analogue
+
+    @property
+    def total_served(self) -> int:
+        return sum(self.served.values())
+
+
+class ChipServer:
+    """Continuous static-batch serving of compiled ``InferencePlan``s.
+
+    ``programs`` maps resident-program names to validated ISA programs;
+    ``artifacts`` maps the same names to their packed deployment artifacts
+    (``fold_params(..., packed=True)`` — float-folded artifacts are packed
+    on admission).  ``batch`` is the static dispatch size; with a ``mesh``
+    it must divide over the mesh's device count.
+    """
+
+    def __init__(self, programs: Mapping[str, isa.Program],
+                 artifacts: Mapping[str, Any], *, batch: int = 8,
+                 mesh=None, donate_frames: bool = False,
+                 interpret: Optional[bool] = None,
+                 f_hz: float = energy.F_EMIN):
+        if set(programs) != set(artifacts):
+            raise ValueError(
+                f"programs {sorted(programs)} != artifacts {sorted(artifacts)}")
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        ndev = mesh.devices.size if mesh is not None else 1
+        if batch % ndev:
+            raise ValueError(
+                f"static batch {batch} must divide over the "
+                f"{ndev}-device serving mesh")
+        self.batch = batch
+        self.mesh = mesh
+        self.f_hz = f_hz
+        self.programs: Dict[str, isa.Program] = dict(programs)
+        self.plans: Dict[str, interpreter.InferencePlan] = {}
+        self.artifacts: Dict[str, Any] = {}
+        self._fns: Dict[str, Any] = {}
+        self._geom: Dict[str, Tuple[int, int, int]] = {}
+        for name, prog in self.programs.items():
+            isa.validate(prog)
+            plan = interpreter.compile_plan(prog)
+            art = interpreter.ensure_packed(artifacts[name])
+            if mesh is not None:
+                art = sharding.replicate_artifact(mesh, art)
+            io = prog.instrs[0]
+            self.plans[name] = plan
+            self.artifacts[name] = art
+            self._geom[name] = (io.height, io.width, io.in_channels)
+            self._fns[name] = plan.make_serve_fn(
+                mesh=mesh, donate_frames=donate_frames, interpret=interpret)
+        self.queue = FrameQueue(self.programs)
+        # static per-program chip reports: computed once, reused by stats()
+        self._reports = {n: energy.analyze_net(p, f_hz)
+                         for n, p in self.programs.items()}
+        self._next_rid = 0
+        self._dispatches = 0
+        self._served = {name: 0 for name in self.programs}
+        self._padded = {name: 0 for name in self.programs}
+        self._host_wall_s = 0.0
+
+    # -- request side -------------------------------------------------------
+
+    def submit(self, program: str, frame) -> int:
+        """Enqueue one frame; returns its request id (arrival order)."""
+        if program not in self._geom:
+            raise KeyError(
+                f"program {program!r} not resident "
+                f"(have {sorted(self._geom)})")
+        h, w, c = self._geom[program]
+        frame = np.asarray(frame)
+        if frame.shape != (h, w, c):
+            raise ValueError(
+                f"{program} expects frames of shape {(h, w, c)}, "
+                f"got {frame.shape}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.submit(FrameRequest(rid=rid, program=program, frame=frame))
+        return rid
+
+    def submit_many(self, program: str, frames) -> List[int]:
+        return [self.submit(program, f) for f in frames]
+
+    # -- dispatch side ------------------------------------------------------
+
+    def step(self) -> List[FrameResult]:
+        """One dispatch: pull a static batch, run its program, return
+        results for the real (non-padding) frames.  [] once drained."""
+        pulled = self.queue.next_batch(self.batch)
+        if pulled is None:
+            return []
+        name, reqs = pulled
+        n_real = len(reqs)
+        frames = np.stack([r.frame for r in reqs])
+        if n_real < self.batch:
+            # static batch: the always-on pipeline doesn't idle — pad with
+            # the last real frame and bill the burned slots.
+            pad = np.broadcast_to(frames[-1],
+                                  (self.batch - n_real,) + frames.shape[1:])
+            frames = np.concatenate([frames, pad])
+        frames = jnp.asarray(frames)
+        if self.mesh is not None:
+            frames = sharding.scatter_frames(self.mesh, frames)
+        t0 = time.perf_counter()
+        logits, labels = self._fns[name](self.artifacts[name], frames)
+        labels = np.asarray(jax.block_until_ready(labels))
+        logits = np.asarray(logits)
+        self._host_wall_s += time.perf_counter() - t0
+        self._served[name] += n_real
+        self._padded[name] += self.batch - n_real
+        dispatch = self._dispatches
+        self._dispatches += 1
+        return [FrameResult(rid=r.rid, program=name, label=int(labels[i]),
+                            logits=logits[i], dispatch=dispatch)
+                for i, r in enumerate(reqs)]
+
+    def drain(self) -> List[FrameResult]:
+        """Serve until the queue is empty; results in dispatch order."""
+        out: List[FrameResult] = []
+        while True:
+            got = self.step()
+            if not got:
+                return out
+            out.extend(got)
+
+    # -- accounting ---------------------------------------------------------
+
+    def stats(self) -> ServeStats:
+        chip = energy.serve_report(self.programs, self._served,
+                                   self._padded, f_hz=self.f_hz,
+                                   reports=self._reports)
+        total = sum(self._served.values())
+        fps = total / self._host_wall_s if self._host_wall_s else 0.0
+        return ServeStats(served=dict(self._served),
+                          padded=dict(self._padded),
+                          dispatches=self._dispatches,
+                          host_wall_s=self._host_wall_s,
+                          host_frames_per_s=fps,
+                          chip=chip)

@@ -78,3 +78,22 @@ try:  # pragma: no cover - exercised implicitly at collection time
     import hypothesis  # noqa: F401
 except ImportError:
     _install_hypothesis_stub()
+
+
+import pytest  # noqa: E402  (after the stub so plugins see it installed)
+
+
+def pytest_collection_modifyitems(config, items):
+    """Auto-mark every hypothesis property test ``slow``.
+
+    The property sweeps are the biggest wall-clock offenders in the suite
+    (20+ examples x jit each); marking them centrally keeps the fast
+    tier (``-m "not slow"``) under control without scattering marks
+    across files.  Works for both the real package
+    (``is_hypothesis_test``) and the offline stub (``_hypothesis_stub``).
+    """
+    for item in items:
+        fn = getattr(item, "obj", None)
+        if fn is not None and (getattr(fn, "is_hypothesis_test", False)
+                               or getattr(fn, "_hypothesis_stub", False)):
+            item.add_marker(pytest.mark.slow)

@@ -95,13 +95,51 @@ def test_elastic_restore_onto_mesh(tmp_path):
     state, optimizer = _state(cfg)
     path = os.path.join(tmp_path, "ckpt_e")
     ckpt.save(path, state, step=0)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = ckpt.make_mesh((1, 1), ("data", "model"))
     specs = steps.state_specs(cfg, mesh, optimizer)
     like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
     restored = ckpt.restore(path, like, mesh=mesh, specs=specs)
     leaf = jax.tree.leaves(restored["params"])[0]
     assert isinstance(leaf.sharding, jax.sharding.NamedSharding)
+
+
+def test_restore_after_fault_rebuilds_mesh(tmp_path):
+    """Regression for the exact seed failure: the restart path built its
+    mesh via a JAX API surface (``jax.make_mesh(..., axis_types=...)`` /
+    ``jax.sharding.AxisType``) that this runtime doesn't have, so recovery
+    died *in the mesh constructor* before touching the checkpoint.  The
+    restore-after-fault path must (a) rebuild a mesh with only
+    version-stable APIs, (b) restore the latest checkpoint onto it
+    bitwise, (c) refuse meshes larger than the surviving device set."""
+    cfg = get_config("smollm-360m").scaled().with_(dtype="float32",
+                                                   param_dtype="float32")
+    state, optimizer = _state(cfg)
+    ac = ckpt.AsyncCheckpointer(str(tmp_path))
+    ac.save(state, step=7)
+    ac.wait()
+
+    # simulated fault -> restart: rediscover latest step, rebuild the mesh
+    # on the surviving topology, restore onto it.
+    g = fault.PreemptionGuard(install=False)
+    g._handler(15, None)
+    assert g.requested
+    step = ckpt.latest_step(str(tmp_path))
+    assert step == 7
+    mesh = ckpt.make_mesh((1, 1), ("data", "model"))
+    specs = steps.state_specs(cfg, mesh, optimizer)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = ckpt.restore(os.path.join(tmp_path, f"ckpt_{step}"), like,
+                            mesh=mesh, specs=specs)
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    leaf = jax.tree.leaves(restored["params"])[0]
+    assert isinstance(leaf.sharding, jax.sharding.NamedSharding)
+
+    # a mesh wider than the surviving devices must fail loudly, not hang
+    with pytest.raises(ValueError, match="devices"):
+        ckpt.make_mesh((max(2, jax.device_count() + 1), 1),
+                       ("data", "model"))
 
 
 # ---------------------------------------------------------------------------

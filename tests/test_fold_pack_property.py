@@ -1,0 +1,190 @@
+"""fold_params(packed=True) round-trips, program-memory included.
+
+Property suite (hypothesis) over *random valid* ISA programs: the packed
+deployment artifact — uint32 weight words + int32 comparator thresholds,
+the chip's SRAM contents — must decode back bit-exact to the float-domain
+folded form it was packed from, and the program words themselves must
+survive assemble -> disassemble.  Exercises the PR-1 ISA widenings on
+their edges: the 10-bit FC ``out_features`` field (hidden layers wider
+than the old 4-bit field), and the IO word's ``in_channels``/``bits``
+fields at their encodable maxima.
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize
+from repro.core.chip import interpreter, isa
+
+
+# ---------------------------------------------------------------------------
+# Random valid program generator
+# ---------------------------------------------------------------------------
+
+def random_program(s: int, seed: int) -> isa.Program:
+    """A random program satisfying every hardware constraint: random IO
+    precision/colors (up to the field edges), 1-4 conv layers with random
+    pooling, optional hidden FCs sized within the 5 kB FC SRAM."""
+    rng = random.Random(seed)
+    f = isa.ARRAY_CHANNELS // s
+    bits = rng.choice([1, 4, 7, 8, 15])            # 15 = _IO_BITS_MAX edge
+    cin = rng.choice([1, 2, 3, 7])                 # 7 = _IO_INCH_MAX edge
+    size = rng.choice([6, 8, 10, 12, 14])
+    instrs = [isa.IOInstr(height=size, width=size, in_channels=cin,
+                          bits=bits, channels=f)]
+
+    weight_bits = 0
+    n_conv = rng.randint(1, 4)
+    for _ in range(n_conv):
+        if size < 2 or weight_bits + f * f * 4 > isa.WEIGHT_SRAM_BITS:
+            break
+        # pool only while a next conv could still fit a 2x2 window
+        pool = rng.random() < 0.5 and (size - 1) // 2 >= 2
+        instrs.append(isa.ConvInstr(height=size, width=size, features=f,
+                                    maxpool=pool))
+        weight_bits += f * f * 4
+        size = (size - 1) // 2 if pool else size - 1
+
+    fc_budget = isa.FC_SRAM_BITS
+    # keep pooling until a 2-class final FC fits the 5 kB FC SRAM *and*
+    # the FC fan-in fits the 11-bit in_features instruction field
+    while (size >= 2
+           and (size * size * f * 2 > fc_budget
+                or size * size * f > isa._FC_IN_MAX)
+           and weight_bits + f * f * 4 <= isa.WEIGHT_SRAM_BITS):
+        pool = (size - 1) // 2 >= 1 and size - 1 >= 2
+        instrs.append(isa.ConvInstr(height=size, width=size, features=f,
+                                    maxpool=pool))
+        weight_bits += f * f * 4
+        size = (size - 1) // 2 if pool else size - 1
+    in_feat = size * size * f
+    classes = rng.randint(2, isa.MAX_CLASSES)
+    # optional hidden FCs — including widths past the old 4-bit field
+    for width in rng.sample([f, 64, 256, 512], k=rng.randint(0, 2)):
+        if in_feat * width + width * classes > fc_budget:
+            continue
+        instrs.append(isa.FCInstr(in_features=in_feat, out_features=width))
+        fc_budget -= in_feat * width
+        in_feat = width
+    if in_feat * classes > fc_budget:              # shrink to fit
+        classes = max(2, fc_budget // in_feat)
+    instrs.append(isa.FCInstr(in_features=in_feat, out_features=classes,
+                              final=True))
+    p = isa.Program(s=s, instrs=tuple(instrs))
+    isa.validate(p)                                # generator soundness
+    return p
+
+
+def _random_bn_params(program: isa.Program, seed: int):
+    """init_params + randomized BN stats so tau/flip are nontrivial (both
+    comparator directions, non-integer thresholds)."""
+    key = jax.random.PRNGKey(seed)
+    params = interpreter.init_params(key, program)
+    for i, p in enumerate(params["conv"]):
+        k = jax.random.fold_in(key, 1000 + i)
+        ks = jax.random.split(k, 4)
+        n = p["gamma"].shape
+        gamma = jax.random.normal(ks[0], n)
+        gamma = jnp.where(jnp.abs(gamma) < 0.05, 0.05, gamma)  # both signs
+        p["gamma"] = gamma
+        p["beta"] = jax.random.normal(ks[1], n)
+        p["mean"] = jax.random.normal(ks[2], n) * 3.0
+        p["var"] = jnp.abs(jax.random.normal(ks[3], n)) + 0.1
+    return params
+
+
+# ---------------------------------------------------------------------------
+# The round-trip property
+# ---------------------------------------------------------------------------
+
+def _assert_roundtrip(program: isa.Program, seed: int):
+    params = _random_bn_params(program, seed)
+    folded = interpreter.fold_params(params, program)
+    packed = interpreter.fold_params(params, program, packed=True)
+
+    convs = [g for g in isa.layer_geometry(program)
+             if isinstance(g[0], isa.ConvInstr)]
+    assert len(packed["conv"]) == len(convs)
+    for p, fp, (ins, _h, _w, c, *_r) in zip(packed["conv"], folded["conv"],
+                                            convs):
+        # weight words -> +/-1 taps, bit-exact vs the folded float form
+        w_back = binarize.unpack_signs(p["w_words"], c, axis=-1)
+        np.testing.assert_array_equal(
+            np.asarray(w_back), np.asarray(fp["w"].reshape(ins.features, 4, c)))
+        # integer comparator threshold: ceil of the folded float tau
+        np.testing.assert_array_equal(
+            np.asarray(p["tau"]),
+            np.asarray(binarize.threshold_to_int(fp["tau"])))
+        assert p["tau"].dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(p["flip"]),
+                                      np.asarray(fp["flip"]).astype(np.int32))
+
+    assert len(packed["fc"]) == len(program.fc_instrs)
+    for p, fp, ins in zip(packed["fc"], folded["fc"], program.fc_instrs):
+        w_back = binarize.unpack_signs(p["w_words"], ins.in_features, axis=-1)
+        np.testing.assert_array_equal(np.asarray(w_back), np.asarray(fp["w"]))
+        assert p["w_words"].shape == (
+            ins.out_features, -(-ins.in_features // binarize.PACK_WIDTH))
+
+    # program memory round-trip (the packed artifact is only deployable
+    # together with its instruction words)
+    back = isa.disassemble(isa.assemble(program), s=program.s)
+    assert back == program
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2 ** 16))
+def test_fold_pack_roundtrip_property(s, seed):
+    program = random_program(s, seed)
+    _assert_roundtrip(program, seed)
+
+
+def test_fold_pack_roundtrip_field_edges():
+    """Deterministic edge program: IO bits/in_channels at their encodable
+    maxima (15 / 7) and a 256-wide hidden FC — the exact fields PR 1
+    widened (the old 4-bit FC field corrupted anything above 15, the old
+    IO word dropped in_channels and truncated 8-bit inputs)."""
+    f = 64                                         # s=4
+    program = isa.Program(s=4, instrs=(
+        isa.IOInstr(height=6, width=6, in_channels=7, bits=15, channels=f),
+        isa.ConvInstr(height=6, width=6, features=f, maxpool=True),
+        isa.ConvInstr(height=2, width=2, features=f, maxpool=False),
+        isa.FCInstr(in_features=f, out_features=256),
+        isa.FCInstr(in_features=256, out_features=10, final=True),
+    ))
+    isa.validate(program)
+    back = isa.disassemble(isa.assemble(program), s=4)
+    assert back.instrs[0].bits == 15 and back.instrs[0].in_channels == 7
+    assert back.instrs[3].out_features == 256      # > old 4-bit max
+    _assert_roundtrip(program, seed=99)
+
+
+def test_fold_pack_rejects_unencodable_fields():
+    """Past-the-edge values must fail loudly at assemble time, not wrap."""
+    f = 64
+    base = [isa.IOInstr(height=6, width=6, in_channels=3, bits=7, channels=f),
+            isa.ConvInstr(height=6, width=6, features=f, maxpool=True),
+            isa.FCInstr(in_features=2 * 2 * f, out_features=10, final=True)]
+    bad_io = isa.Program(s=4, instrs=tuple(
+        [isa.IOInstr(height=6, width=6, in_channels=3, bits=16, channels=f)]
+        + base[1:]))
+    with pytest.raises(isa.ProgramError, match="bits"):
+        isa.assemble(bad_io)
+    with pytest.raises(isa.ProgramError, match="out_features"):
+        isa._encode_instr(isa.FCInstr(in_features=64, out_features=1024))
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2 ** 16))
+def test_random_program_plan_compiles(s, seed):
+    """Every generated program also compiles to an InferencePlan (its
+    geometry is fully resolvable) — guards the generator itself and the
+    plan builder's stage coverage."""
+    program = random_program(s, seed)
+    plan = interpreter.compile_plan(program)
+    assert len(plan.stages) == len(program.instrs)

@@ -17,6 +17,8 @@ from repro.launch import hlo_cost
 def _cost_official(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
     ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):     # older JAX: one dict per device
+        ca = ca[0]
     return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
 
 

@@ -24,7 +24,8 @@ def _rand_qkv(key, b, s, h, kh, d, dtype=jnp.float32):
 @pytest.mark.parametrize("b,s,h,kh,d,bq,bk", [
     (1, 128, 4, 4, 16, 64, 64),     # MHA
     (2, 128, 4, 2, 16, 32, 64),     # GQA g=2
-    (1, 256, 6, 2, 8, 64, 128),     # GQA g=3, rectangular blocks
+    pytest.param(1, 256, 6, 2, 8, 64, 128,
+                 marks=pytest.mark.slow),  # GQA g=3, rectangular (heaviest)
     (1, 64, 8, 1, 32, 64, 32),      # MQA
 ])
 def test_flash_matches_oracle(b, s, h, kh, d, bq, bk):

@@ -51,16 +51,18 @@ def test_chunked_matches_scan(chunk):
 
 
 def test_chunked_strong_decay_clamp_benign():
-    """Channels decayed below e^-20 within a chunk deviate only where the
-    reference contribution is itself negligible."""
+    """Aggressive decay (channels past e^-20 within a chunk) must match the
+    scan: the chunked path forms the pairwise exponent la_{c-1} - la_s
+    directly (always <= 0), so there is no overflow and no clamp — the seed's
+    la clamp at -20 made these channels wrong by ~0.1."""
     b, s, h, hs = 1, 32, 2, 4
     rh, kh, vh, wh, u = _rand_inputs(jax.random.PRNGKey(1), b, s, h, hs,
                                      w_lo=0.05)   # aggressive decay
     S0 = jnp.zeros((b, h, hs, hs))
     S_ref, y_ref = _scan_oracle(rh, kh, vh, wh, u, S0)
     S_c, y_c = rwkv6._wkv_chunked(rh, kh, vh, wh, u, S0, 16)
-    np.testing.assert_allclose(y_c, y_ref, rtol=1e-3, atol=1e-3)
-    np.testing.assert_allclose(S_c, S_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(y_c, y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(S_c, S_ref, rtol=2e-4, atol=2e-4)
 
 
 @settings(max_examples=15, deadline=None)

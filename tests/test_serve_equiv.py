@@ -17,7 +17,9 @@ ARCHS = ["smollm-360m", "gemma2-2b", "jamba-v0.1-52b", "rwkv6-3b",
          "musicgen-medium", "olmoe-1b-7b", "qwen3-8b"]
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize(
+    "arch", [pytest.param(a, marks=pytest.mark.slow)
+             if a == "jamba-v0.1-52b" else a for a in ARCHS])
 def test_prefill_decode_matches_forward(arch):
     cfg = get_config(arch).scaled().with_(dtype="float32",
                                           param_dtype="float32")

@@ -22,6 +22,7 @@ def _run(cfg, optimizer, n_steps, seed=0):
     return losses, state
 
 
+@pytest.mark.slow
 def test_lm_training_learns():
     cfg = get_config("smollm-360m").scaled().with_(
         dtype="float32", param_dtype="float32", loss_chunk=32)
@@ -31,6 +32,7 @@ def test_lm_training_learns():
     assert losses[-1] < losses[0] - 0.8, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_binary_lm_training_learns():
     """BinaryNet (the paper's technique) trains via STE at LM scale."""
     cfg = get_config("smollm-360m").scaled().with_(
