@@ -1,0 +1,121 @@
+"""Bench regression guard: fresh microbench vs the committed baseline.
+
+Usage (CI runs exactly this, see .github/workflows/ci.yml)::
+
+    BENCH_KERNELS_JSON=BENCH_fresh.json \
+        PYTHONPATH=src python benchmarks/kernel_microbench.py
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        --baseline BENCH_kernels.json --fresh BENCH_fresh.json
+
+Two kinds of checks:
+
+* **throughput keys** (``pipeline_frames_per_s``, ``serve_frames_per_s``)
+  fail the job when the fresh run is more than ``--tolerance`` (default
+  10%) below the committed baseline — the perf-trajectory contract: a PR
+  that slows the packed pipeline or the serving path must either fix the
+  regression or consciously refresh the baseline with the fresh numbers
+  (and say why in the PR).  Absolute frames/s only compare within one
+  machine class, so when the recorded ``host`` fingerprint (or backend)
+  differs from the baseline these checks downgrade to warnings.
+* **invariant keys** — machine-independent ratios that must never dip
+  below 1: the megakernel must beat the staged plan
+  (``megakernel_speedup_vs_staged``) and the fused plan must beat the
+  seed path (``pipeline_fused_speedup``).  These hold on any host, so
+  they are hard floors rather than tolerance bands.
+
+Exit 0 iff every check passes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+THROUGHPUT_KEYS = ("pipeline_frames_per_s", "serve_frames_per_s")
+INVARIANT_FLOORS = {
+    "megakernel_speedup_vs_staged": 1.0,
+    "pipeline_fused_speedup": 1.0,
+}
+
+
+def check(baseline: dict, fresh: dict, tolerance: float) -> list:
+    """Returns a list of failure strings (empty == pass)."""
+    failures = []
+    same_host = (baseline.get("host") is not None
+                 and baseline.get("host") == fresh.get("host")
+                 and baseline.get("backend") == fresh.get("backend"))
+    if not same_host:
+        print(f"  host changed ({baseline.get('host')} -> "
+              f"{fresh.get('host')}): absolute frames/s checks downgraded "
+              "to warnings, ratio floors still enforced")
+    for key in THROUGHPUT_KEYS:
+        if key not in fresh:
+            failures.append(f"{key}: missing from the fresh run")
+            continue
+        if key not in baseline:
+            print(f"  {key}: no baseline yet ({fresh[key]:.1f} fresh) — ok")
+            continue
+        base, new = float(baseline[key]), float(fresh[key])
+        ratio = new / base if base else 1.0
+        bad = ratio < 1.0 - tolerance
+        verdict = ("ok" if not bad
+                   else "REGRESSION" if same_host else "warning (new host)")
+        print(f"  {key}: {base:,.1f} -> {new:,.1f}  ({ratio:.2f}x)  {verdict}")
+        if bad and same_host:
+            failures.append(
+                f"{key} regressed {(1 - ratio) * 100:.0f}% "
+                f"(> {tolerance * 100:.0f}% tolerance): "
+                f"{base:,.1f} -> {new:,.1f}")
+    for key, floor in INVARIANT_FLOORS.items():
+        if key not in fresh:
+            failures.append(f"{key}: missing from the fresh run")
+            continue
+        val = float(fresh[key])
+        verdict = "ok" if val >= floor else "BELOW FLOOR"
+        print(f"  {key}: {val:.2f} (floor {floor:.2f})  {verdict}")
+        if val < floor:
+            failures.append(f"{key} = {val:.2f} fell below the {floor:.2f} "
+                            "floor")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_kernels.json",
+                    help="committed perf baseline (the repo's trajectory)")
+    ap.add_argument("--fresh", required=True,
+                    help="BENCH json written by a fresh microbench run")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional throughput drop (default 0.10)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"no baseline at {args.baseline} — enforcing only the ratio "
+              "floors (commit a BENCH_kernels.json to start the trajectory)")
+        baseline = {}
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if baseline.get("backend") != fresh.get("backend"):
+        print(f"note: backend changed "
+              f"({baseline.get('backend')} -> {fresh.get('backend')}); "
+              "throughput comparison is indicative only")
+
+    print(f"bench regression check (tolerance {args.tolerance * 100:.0f}%):")
+    failures = check(baseline, fresh, args.tolerance)
+    if failures:
+        print("\nFAIL:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        print("(an intentional perf change must refresh BENCH_kernels.json "
+              "with the fresh numbers)")
+        return 1
+    print("all bench checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,15 +8,31 @@ lowers through Mosaic):
 2. the fused batched pipeline (``InferencePlan``: single IO pack, fused
    conv->threshold->pool->repack stages, packed hidden FC) vs the seed
    path (per-image ``jax.vmap`` conv kernel + float comparator + repack
-   at every layer boundary) on a full benchmark program — this is the
-   end-to-end win of keeping feature maps bit-packed;
-3. frames/sec of the deployed plan, the serving-throughput headline;
-4. frames/sec through the chip-tier serving subsystem (``ChipServer``):
+   at every layer boundary) on a full benchmark program over a streaming
+   batch — this is the end-to-end win of keeping feature maps bit-packed
+   — plus a per-layer timing breakdown of the staged path;
+3. the whole-network **megakernel** (weight image VMEM-resident, feature
+   maps in VMEM scratch, frame tiles double-buffered through one
+   ``pallas_call``) vs the staged plan, with the HBM bytes each mode
+   moves (``energy.hbm_traffic``) — the all-memory-on-chip headline;
+4. frames/sec of the deployed plan, the serving-throughput headline;
+5. frames/sec through the chip-tier serving subsystem (``ChipServer``):
    the same packed plan behind the request queue / static-batch
-   scheduler, single-program and with two programs resident (S-mode
-   multi-program batching) — and, when more than one device is visible
+   scheduler, single-program, with two programs resident (S-mode
+   multi-program batching), with double-buffered submission
+   (``prefetch=True``) — and, when more than one device is visible
    (e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``), over
    the sharded serving mesh.
+
+Results go to ``BENCH_fresh.json`` (override with ``BENCH_KERNELS_JSON``);
+``benchmarks/check_regression.py`` compares a fresh run against the
+*committed* baseline ``BENCH_kernels.json`` and fails CI when the
+frames/s keys regress more than 10% (ratio floors on any host; absolute
+frames/s when the host class matches).  To refresh the baseline after an
+intentional perf change::
+
+    BENCH_KERNELS_JSON=BENCH_kernels.json \
+        PYTHONPATH=src python benchmarks/kernel_microbench.py
 
 Results are written to ``BENCH_kernels.json`` so CI keeps a perf
 trajectory across PRs.  Exit 0 iff all paths are bit-exact vs their
@@ -34,20 +50,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import binarize
-from repro.core.chip import interpreter, networks, neuron_array as na
+from repro.core.chip import energy, interpreter, networks, neuron_array as na
 from repro.kernels import ops, ref
 from repro.kernels import binary_conv2x2 as _bc
 
-BENCH_JSON = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
+# default to a fresh-run file: the committed BENCH_kernels.json baseline
+# is only overwritten on an explicit BENCH_KERNELS_JSON=BENCH_kernels.json
+BENCH_JSON = os.environ.get("BENCH_KERNELS_JSON", "BENCH_fresh.json")
 
 
 def _bench(fn, *args, iters=5):
+    """Best-of-iters wall time (us): the min is the least noisy estimator
+    on a shared host — contention only ever adds time."""
     jax.block_until_ready(fn(*args))              # compile + warm
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
 
 
 def _seed_vmap_forward(program, folded, images):
@@ -118,17 +139,55 @@ def _bench_matmul(results):
     return ok
 
 
+def _bench_staged_layers(plan, packed, imgs, results):
+    """Per-layer timing breakdown of the staged path: where do the µs go
+    (and which layer boundaries the megakernel fuses away)."""
+    x = imgs
+    ci = fi = 0
+    rows = []
+    for st in plan.stages:
+        if isinstance(st, interpreter._IOStage):
+            fn = jax.jit(lambda a, st=st: na.thermometer_encode_packed(
+                a, st.bits, st.channels))
+            name = "IO encode"
+        elif isinstance(st, interpreter._ConvStage):
+            p = packed["conv"][ci]
+            fn = jax.jit(lambda a, p=p, st=st: ops.binary_conv2x2_block(
+                a, p["w_words"], p["tau"], p["flip"], st.c, pool=st.pool))
+            name = f"conv{ci}" + ("+pool" if st.pool else "")
+            ci += 1
+        else:
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            p = packed["fc"][fi]
+            fn = jax.jit(lambda a, p=p, st=st: ops.xnor_matmul(
+                a, p["w_words"], st.in_features, pack_out=st.pack_out))
+            name = f"fc{fi}" + (" (final)" if st.final else "")
+            fi += 1
+        rows.append((name, _bench(fn, x, iters=3)))
+        out = fn(x)
+        if rows[-1][0].startswith("fc") and not st.final and not st.pack_out:
+            out = binarize.pack_signs(
+                binarize.hard_sign(out.astype(jnp.float32)), axis=-1)
+        x = out
+    print("staged per-layer breakdown:")
+    for name, t in rows:
+        print(f"  {name:12s}: {t:8.0f} us")
+    results["staged_layer_us"] = {name: round(t, 1) for name, t in rows}
+
+
 def _bench_pipeline(results):
-    """Fused batched plan vs the seed per-image-vmap path, full program."""
+    """Fused staged plan vs the seed per-image-vmap path, full program
+    over a streaming batch, with the staged per-layer breakdown."""
     program = networks.mnist5()
-    batch = 8
+    batch = 64
     key = jax.random.PRNGKey(2)
     params = interpreter.init_params(key, program)
     io = program.instrs[0]
     imgs = jax.random.randint(
         jax.random.PRNGKey(3), (batch, io.height, io.width, io.in_channels),
         0, 2 ** io.bits)
-    _, params = interpreter.forward_train(params, program, imgs)
+    _, params = interpreter.forward_train(params, program, imgs[:8])
     folded = interpreter.fold_params(params, program)
     packed = interpreter.pack_folded(folded)
 
@@ -138,14 +197,28 @@ def _bench_pipeline(results):
     fused = jax.jit(lambda pk, im: plan.forward(pk, im))
     seed = jax.jit(lambda fl, im: _seed_vmap_forward(program, fl, im))
 
-    t_fused = _bench(fused, packed, imgs, iters=3)
-    t_seed = _bench(seed, folded, imgs, iters=3)
+    # paired alternation (see _bench_megakernel): each back-to-back pair
+    # sees the same host load, so the median of per-pair ratios is a
+    # load-robust speedup; the us fields report best-of-reps.
+    jax.block_until_ready(fused(packed, imgs))
+    jax.block_until_ready(seed(folded, imgs))
+    t_fused = t_seed = float("inf")
+    ratios = []
+    for _ in range(7):
+        t0 = time.perf_counter()
+        jax.block_until_ready(seed(folded, imgs))
+        ts = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fused(packed, imgs))
+        tf = (time.perf_counter() - t0) * 1e6
+        t_seed, t_fused = min(t_seed, ts), min(t_fused, tf)
+        ratios.append(ts / tf)
 
     logits_f, labels_f = fused(packed, imgs)
     logits_s, labels_s = seed(folded, imgs)
     ok = bool(jnp.all(logits_f == logits_s) and jnp.all(labels_f == labels_s))
     fps = batch / (t_fused * 1e-6)
-    speedup = t_seed / t_fused
+    speedup = sorted(ratios)[len(ratios) // 2]
 
     print(f"\n== Packed pipeline ({program.instrs[1].features}-wide mnist5, "
           f"batch={batch}) ==")
@@ -155,12 +228,83 @@ def _bench_pipeline(results):
           "(bit-packed end to end)")
     print(f"  -> {speedup:.2f}x, {fps:,.0f} frames/s host-sim throughput")
     print(f"fused plan bit-exact vs seed path: {ok}")
+    _bench_staged_layers(plan, packed, imgs, results)
     results["pipeline_seed_vmap_us"] = round(t_seed, 1)
     results["pipeline_fused_us"] = round(t_fused, 1)
     results["pipeline_fused_speedup"] = round(speedup, 2)
     results["pipeline_frames_per_s"] = round(fps, 1)
     results["pipeline_batch"] = batch
     return ok, speedup
+
+
+def _bench_megakernel(results):
+    """Whole-network megakernel vs the staged plan on the paper's always-on
+    benchmark net (cifar9 at the S=4 minimum-energy point): 8 conv layers
+    whose inter-layer feature maps the staged path round-trips through HBM
+    and the megakernel keeps in VMEM scratch."""
+    program = networks.cifar9(4)
+    batch, bb = 32, 16
+    key = jax.random.PRNGKey(4)
+    params = interpreter.init_params(key, program)
+    io = program.instrs[0]
+    imgs = jax.random.randint(
+        jax.random.PRNGKey(5), (batch, io.height, io.width, io.in_channels),
+        0, 2 ** io.bits)
+    _, params = interpreter.forward_train(params, program, imgs[:4])
+    packed = interpreter.fold_params(params, program, packed=True)
+    image = interpreter.build_weight_image(packed, program)
+    plan = interpreter.compile_plan(program)
+    staged = jax.jit(lambda pk, im: plan.forward(pk, im))
+    mega = jax.jit(lambda ig, im: plan.forward_mega(ig, im, bb=bb))
+
+    # alternate the contenders rep by rep: each back-to-back pair sees the
+    # same host load, so the *median of per-pair ratios* is a far less
+    # noisy speedup estimator on a shared CPU than comparing two
+    # independent minima (per-pair ratios scatter with load spikes, the
+    # median cancels them); the us fields still report best-of-reps.
+    jax.block_until_ready(staged(packed, imgs))
+    jax.block_until_ready(mega(image, imgs))
+    t_staged = t_mega = float("inf")
+    ratios = []
+    for _ in range(15):
+        t0 = time.perf_counter()
+        jax.block_until_ready(staged(packed, imgs))
+        ts = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(mega(image, imgs))
+        tm = (time.perf_counter() - t0) * 1e6
+        t_staged, t_mega = min(t_staged, ts), min(t_mega, tm)
+        ratios.append(ts / tm)
+
+    logits_st, labels_st = staged(packed, imgs)
+    logits_mg, labels_mg = mega(image, imgs)
+    ok = bool(jnp.all(logits_mg == logits_st)
+              and jnp.all(labels_mg == labels_st))
+    speedup = sorted(ratios)[len(ratios) // 2]
+    fps = batch / (t_mega * 1e-6)
+    traffic = energy.hbm_traffic(program, batch=batch)
+
+    print(f"\n== Megakernel (cifar9 S=4, 9 layers, batch={batch}, "
+          f"bb={bb}) ==")
+    print(f"staged plan (per-layer calls): {t_staged:9.0f} us/batch")
+    print(f"resident megakernel          : {t_mega:9.0f} us/batch "
+          f"({speedup:.2f}x, {fps:,.0f} frames/s)")
+    print(f"HBM bytes/batch: staged {traffic.staged_bytes/1e6:.2f} MB -> "
+          f"megakernel {traffic.mega_bytes/1e6:.2f} MB "
+          f"({traffic.reduction:.1f}x less off-chip traffic; "
+          f"{traffic.weight_image_bytes/1024:.0f} kB weight image resident)")
+    print(f"megakernel bit-exact vs staged plan: {ok}")
+    results["megakernel_us"] = round(t_mega, 1)
+    results["megakernel_staged_us"] = round(t_staged, 1)
+    results["megakernel_bb"] = bb
+    results["megakernel_batch"] = batch
+    results["megakernel_program"] = "cifar9_s4"
+    results["megakernel_speedup_vs_staged"] = round(speedup, 2)
+    results["megakernel_frames_per_s"] = round(fps, 1)
+    results["hbm_staged_bytes_per_batch"] = traffic.staged_bytes
+    results["hbm_megakernel_bytes_per_batch"] = traffic.mega_bytes
+    results["hbm_traffic_reduction"] = round(traffic.reduction, 2)
+    return ok
 
 
 def _bench_serve(results):
@@ -187,19 +331,21 @@ def _bench_serve(results):
             jax.jit(lambda pk, im, plan=plan: plan.forward(pk, im)[1])(
                 arts[name], jnp.asarray(frames[name])))
 
-    def serve(names, label, mesh=None):
+    def serve(names, label, mesh=None, prefetch=False):
         server = ChipServer({n: progs[n] for n in names},
                             {n: arts[n] for n in names},
-                            batch=batch, mesh=mesh)
+                            batch=batch, mesh=mesh, prefetch=prefetch)
         for n in names:                        # warm the compile caches
             server.submit_many(n, frames[n][:batch])
         server.drain()
-        t0 = time.perf_counter()
-        for i in range(n_frames):              # interleaved arrival
-            for n in names:
-                server.submit(n, frames[n][i])
-        res = server.drain()
-        dt = time.perf_counter() - t0
+        dt = float("inf")
+        for _round in range(3):                # best-of-3 timed drains
+            t0 = time.perf_counter()
+            for i in range(n_frames):          # interleaved arrival
+                for n in names:
+                    server.submit(n, frames[n][i])
+            res = server.drain()
+            dt = min(dt, time.perf_counter() - t0)
         per = {n: [] for n in names}
         for r in sorted(res, key=lambda r: r.rid):   # per-program FIFO
             per[r.program].append(r.label)
@@ -214,10 +360,13 @@ def _bench_serve(results):
           "device(s)) ==")
     fps_1, ok_1 = serve(["mnist5"], "single program")
     fps_m, ok_m = serve(list(progs), "two programs resident")
+    fps_p, ok_p = serve(["mnist5"], "single program, prefetch",
+                        prefetch=True)
     results["serve_frames_per_s"] = round(fps_1, 1)
     results["serve_frames_per_s_multi"] = round(fps_m, 1)
+    results["serve_frames_per_s_prefetch"] = round(fps_p, 1)
     results["serve_batch"] = batch
-    ok = ok_1 and ok_m
+    ok = ok_1 and ok_m and ok_p
     if jax.device_count() > 1:
         mesh = sharding.serve_mesh()
         fps_s, ok_s = serve(["mnist5"],
@@ -229,11 +378,18 @@ def _bench_serve(results):
 
 
 def run(csv: bool = True):
-    results = {"backend": jax.default_backend()}
+    import platform
+    results = {"backend": jax.default_backend(),
+               # absolute frames/s are only comparable on the same machine
+               # class; the regression guard checks this fingerprint and
+               # downgrades absolute-key mismatches to warnings when the
+               # host changed (ratio floors always apply).
+               "host": f"{platform.machine()}-{os.cpu_count()}cpu"}
     ok_mm = _bench_matmul(results)
     ok_pipe, speedup = _bench_pipeline(results)
+    ok_mega = _bench_megakernel(results)
     ok_serve = _bench_serve(results)
-    ok = ok_mm and ok_pipe and ok_serve
+    ok = ok_mm and ok_pipe and ok_mega and ok_serve
 
     with open(BENCH_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

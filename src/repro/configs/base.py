@@ -49,6 +49,10 @@ class RWKVConfig:
     # roofline bottleneck of rwkv6 at train/prefill.
     scan_unroll: int = 1             # lax.scan unroll of the per-token path
     chunk: Optional[int] = None      # GLA-style chunked WKV (tokens/chunk)
+    sub_chunk: int = 16              # FLA-style sub-chunks within a chunk:
+    #   cross-sub-chunk decay runs as rebased (c, C) matmuls, the exact
+    #   pairwise einsum only within a sub-chunk (must divide `chunk`;
+    #   a non-divisor falls back to one exact sub-chunk = the full chunk)
 
 
 @dataclasses.dataclass(frozen=True)

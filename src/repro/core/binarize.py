@@ -119,6 +119,32 @@ def xnor_dot_popcount(a_words: jax.Array, w_words: jax.Array, k: int) -> jax.Arr
     return jnp.int32(k) - 2 * jnp.sum(pc, axis=-1)
 
 
+def thermometer_pack(images: jax.Array, bits: int, cin: int,
+                     channels: int) -> jax.Array:
+    """Thermometer-encode integer pixels straight into packed uint32 words.
+
+    The single source of truth for the chip's IO layer arithmetic, shared
+    by ``neuron_array.thermometer_encode_packed`` (the staged pipeline)
+    and the whole-network megakernel's in-kernel encode — one
+    implementation so the two execution modes cannot drift apart.  Plane
+    i of color c is -1 (bit 1) exactly when ``x_c < t_i``; leftover
+    planes are constant +1 bias (bit 0).  ``channels`` must be a
+    multiple of 32.  (..., H, W, cin) int -> (..., H, W, channels//32).
+    """
+    assert channels % PACK_WIDTH == 0, channels
+    lead = images.shape[:-1]
+    per = channels // cin
+    levels = 2 ** bits
+    t = (jnp.arange(per, dtype=jnp.float32) + 0.5) * (levels / per)
+    neg = (images.astype(jnp.float32)[..., None] < t).astype(_PACK_DTYPE)
+    neg = neg.reshape(lead + (cin * per,))
+    pad = channels - cin * per
+    if pad:                                              # +1 bias -> bit 0
+        neg = jnp.concatenate(
+            [neg, jnp.zeros(lead + (pad,), neg.dtype)], axis=-1)
+    return pack_bit_lanes(neg)
+
+
 # ---------------------------------------------------------------------------
 # BatchNorm -> threshold folding (the chip's binary comparator)
 # ---------------------------------------------------------------------------

@@ -156,6 +156,81 @@ def peak_gops(p: isa.Program, f_hz: float = F_MAX) -> float:
 
 
 # ---------------------------------------------------------------------------
+# TPU-side residency accounting: HBM traffic of staged vs megakernel runs
+# ---------------------------------------------------------------------------
+# The chip "requires no off-chip bandwidth": weights and feature maps never
+# leave the SRAMs.  On the TPU mapping that property is a *choice*: the
+# staged InferencePlan launches one Pallas call per layer, so every packed
+# feature map (and every layer's weights, re-fetched per dispatch) crosses
+# HBM between stages; the megakernel holds the weight image + feature maps
+# VMEM-resident and its only HBM traffic is frames in, logits out.  This
+# model bills both so the microbench/docs can quote the eliminated bytes —
+# the TPU analogue of dropping the off-chip term from the access billing.
+
+_WORD = 4                           # bytes per uint32/int32 lane
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficReport:
+    """Per-batch HBM bytes for one compiled program, both execution modes."""
+    batch: int
+    staged_layers: List              # (layer name, bytes) per staged stage
+    staged_bytes: int                # total staged HBM traffic / batch
+    mega_bytes: int                  # megakernel: frames in + logits out
+    weight_image_bytes: int          # the VMEM-resident SRAM image
+
+    @property
+    def reduction(self) -> float:
+        return self.staged_bytes / self.mega_bytes if self.mega_bytes else 0.0
+
+
+def hbm_traffic(p: isa.Program, batch: int = 1) -> TrafficReport:
+    """Bill the HBM bytes a batch moves under each execution mode.
+
+    Staged: per layer, read the packed input map + the layer's weights
+    (re-fetched every dispatch) + write the packed output map.  Megakernel:
+    read the raw frames + the weight image once, write the logits — zero
+    inter-layer traffic (feature maps live in VMEM scratch, weights stay
+    resident across the whole frame stream).
+    """
+    isa.validate(p)
+    pw = 32                          # packed channels per word
+    layers = []
+    weight_bytes = 0
+    frames_bytes = logits_bytes = 0
+    for (ins, in_h, in_w, in_c, out_h, out_w, out_c) in isa.layer_geometry(p):
+        if isinstance(ins, isa.IOInstr):
+            frames_bytes = batch * in_h * in_w * ins.in_channels * _WORD
+            out_map = batch * out_h * out_w * (out_c // pw) * _WORD
+            layers.append(("IO", frames_bytes + out_map))
+        elif isinstance(ins, isa.ConvInstr):
+            w_b = ins.features * 4 * (in_c // pw) * _WORD
+            thr_b = 2 * ins.features * _WORD           # tau + flip
+            in_map = batch * in_h * in_w * (in_c // pw) * _WORD
+            out_map = batch * out_h * out_w * (out_c // pw) * _WORD
+            weight_bytes += w_b + thr_b
+            layers.append((f"CNN {in_h}x{in_w}x{in_c}",
+                           w_b + thr_b + in_map + out_map))
+        else:
+            kw = -(-ins.in_features // pw)
+            w_b = ins.out_features * kw * _WORD
+            in_b = batch * kw * _WORD
+            if ins.final:
+                out_b = batch * ins.out_features * _WORD     # int32 logits
+                logits_bytes = out_b
+            else:
+                out_b = batch * -(-ins.out_features // pw) * _WORD
+            weight_bytes += w_b
+            layers.append((f"FC {ins.in_features}->{ins.out_features}",
+                           w_b + in_b + out_b))
+    staged = sum(b for _, b in layers)
+    mega = frames_bytes + weight_bytes + logits_bytes
+    return TrafficReport(batch=batch, staged_layers=layers,
+                         staged_bytes=staged, mega_bytes=mega,
+                         weight_image_bytes=weight_bytes)
+
+
+# ---------------------------------------------------------------------------
 # Serving-mix accounting: the chip time-shared across resident programs
 # ---------------------------------------------------------------------------
 

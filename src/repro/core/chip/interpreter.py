@@ -118,7 +118,8 @@ def forward_train(params, program: isa.Program, images: jax.Array,
 # Inference-mode forward (folded thresholds, optional Pallas kernels)
 # ---------------------------------------------------------------------------
 
-def fold_params(params, program: isa.Program, *, packed: bool = False):
+def fold_params(params, program: isa.Program, *, packed: bool = False,
+                image: bool = False):
     """Fold BN into comparator thresholds (what the chip stores).
 
     With ``packed=False`` (default) returns the float-domain folded form:
@@ -126,6 +127,9 @@ def fold_params(params, program: isa.Program, *, packed: bool = False):
     reference the packed path is tested bit-exact against.  With
     ``packed=True`` returns the deployment artifact consumed by
     :class:`InferencePlan` (see :func:`pack_folded` for the layout).
+    With ``image=True`` (implies packed) returns the contiguous
+    weight-image artifact the whole-network megakernel holds VMEM-resident
+    — the SRAM image (see :func:`build_weight_image`).
     """
     folded_convs = []
     for p in params["conv"]:
@@ -134,6 +138,8 @@ def fold_params(params, program: isa.Program, *, packed: bool = False):
         folded_convs.append(dict(w=binarize.hard_sign(p["w"]), tau=tau, flip=flip))
     fcs = [dict(w=binarize.hard_sign(p["w"])) for p in params["fc"]]
     folded = {"conv": folded_convs, "fc": fcs}
+    if image:
+        return build_weight_image(pack_folded(folded), program)
     return pack_folded(folded) if packed else folded
 
 
@@ -166,13 +172,64 @@ def _is_packed_artifact(folded) -> bool:
     return bool(stages) and "w_words" in stages[0]
 
 
+def _is_image_artifact(artifact) -> bool:
+    return isinstance(artifact, dict) and "cw" in artifact and "fw" in artifact
+
+
 def ensure_packed(artifact):
     """Admission helper: accept either artifact form, return the packed one.
 
     The public seam for consumers outside this module (the serving layer
     admits both float-folded and packed artifacts).
     """
+    if _is_image_artifact(artifact):
+        raise TypeError(
+            "weight-image artifact cannot be unstacked back to the packed "
+            "per-layer form; fold with packed=True (or keep both)")
     return artifact if _is_packed_artifact(artifact) else pack_folded(artifact)
+
+
+def build_weight_image(packed, program: isa.Program) -> Dict[str, Any]:
+    """Stack a packed per-layer artifact into one contiguous weight image.
+
+    The megakernel's VMEM-resident operand set — the TPU analogue of the
+    chip's weight/FC SRAM contents, loaded once and resident while frames
+    stream:
+
+      ``cw``: (n_conv, F, 4, Cw) uint32 conv weight words (every conv in a
+          valid program has F = C = 256/S, so the stack is rectangular);
+      ``ct``/``cf``: (n_conv, F) int32 comparator thresholds / directions;
+      ``fw``: (n_fc, N_max, Kw_max) uint32 FC weight words, zero-padded to
+          the widest layer (zero words encode +1 and are never read: the
+          kernel slices each layer's true (N, Kw) statically).
+    """
+    isa.validate(program)
+    f = isa.ARRAY_CHANNELS // program.s
+    cww = f // binarize.PACK_WIDTH
+    convs = packed["conv"]
+    if convs:
+        cw = jnp.stack([p["w_words"] for p in convs])
+        ct = jnp.stack([p["tau"] for p in convs]).astype(jnp.int32)
+        cf = jnp.stack([p["flip"] for p in convs]).astype(jnp.int32)
+    else:                       # conv-less program: dummy slot, never read
+        cw = jnp.zeros((1, f, 4, cww), jnp.uint32)
+        ct = jnp.zeros((1, f), jnp.int32)
+        cf = jnp.zeros((1, f), jnp.int32)
+    fcs = packed["fc"]
+    n_max = max(p["w_words"].shape[0] for p in fcs)
+    kw_max = max(p["w_words"].shape[1] for p in fcs)
+    fw = jnp.stack([
+        jnp.pad(p["w_words"], ((0, n_max - p["w_words"].shape[0]),
+                               (0, kw_max - p["w_words"].shape[1])))
+        for p in fcs])
+    return {"cw": cw, "ct": ct, "cf": cf, "fw": fw}
+
+
+def ensure_image(artifact, program: isa.Program):
+    """Admission helper: accept any artifact form, return the weight image."""
+    if _is_image_artifact(artifact):
+        return artifact
+    return build_weight_image(ensure_packed(artifact), program)
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +268,7 @@ class InferencePlan:
     """
     program: isa.Program
     stages: Tuple[Any, ...]
+    mega: Tuple[Any, ...] = ()   # static stage spec for the megakernel
 
     def forward(self, packed, images: jax.Array,
                 interpret: bool | None = None):
@@ -247,16 +305,42 @@ class InferencePlan:
         logits = logits.astype(jnp.float32)
         return logits, jnp.argmax(logits, axis=-1)
 
-    def make_fn(self, interpret: bool | None = None):
-        """jit: (packed_artifact, images) -> (logits, labels)."""
+    def forward_mega(self, image, images: jax.Array,
+                     interpret: bool | None = None, bb: int = 8):
+        """Whole-network megakernel forward: one resident ``pallas_call``.
+
+        ``image`` is the weight-image artifact (``fold_params(...,
+        image=True)`` / :func:`ensure_image`) — the full SRAM contents,
+        VMEM-resident; inter-layer feature maps live in VMEM scratch and
+        frame tiles of ``bb`` double-buffer through the grid, so the only
+        HBM traffic is frames in, logits out (the chip's "no off-chip
+        bandwidth" execution model).  Bit-exact vs :meth:`forward`.
+        """
+        logits = kops.megakernel_forward(image, images, spec=self.mega,
+                                         bb=bb, interpret=interpret)
+        logits = logits.astype(jnp.float32)
+        return logits, jnp.argmax(logits, axis=-1)
+
+    def make_fn(self, interpret: bool | None = None,
+                megakernel: bool = False, bb: int = 8):
+        """jit: (artifact, images) -> (logits, labels).
+
+        ``megakernel=True`` runs the whole-network resident kernel and
+        expects the weight-image artifact; default is the staged pipeline
+        on the packed per-layer artifact.
+        """
         @jax.jit
-        def fn(packed, images):
-            return self.forward(packed, images, interpret=interpret)
+        def fn(artifact, images):
+            if megakernel:
+                return self.forward_mega(artifact, images,
+                                         interpret=interpret, bb=bb)
+            return self.forward(artifact, images, interpret=interpret)
         return fn
 
     def make_serve_fn(self, mesh=None, donate_frames: bool = False,
-                      interpret: bool | None = None):
-        """Serving entry point: jit'd (packed, frames) -> (logits, labels).
+                      interpret: bool | None = None,
+                      megakernel: bool = False, bb: int = 8):
+        """Serving entry point: jit'd (artifact, frames) -> (logits, labels).
 
         The deployment-side twin of :meth:`make_fn`, with two extra knobs
         the offline path doesn't need:
@@ -274,9 +358,18 @@ class InferencePlan:
           dispatch and never reads a dispatched buffer again, so the
           runtime may reuse it in place (a no-op on backends without
           buffer donation).
+
+        ``megakernel=True`` swaps the staged stage chain for the resident
+        whole-network kernel (artifact = the weight image); the sharding
+        story is unchanged — the image replicates like the packed
+        artifact, frames scatter on batch.
         """
-        fwd = lambda packed, frames: self.forward(packed, frames,
-                                                  interpret=interpret)
+        if megakernel:
+            fwd = lambda image, frames: self.forward_mega(
+                image, frames, interpret=interpret, bb=bb)
+        else:
+            fwd = lambda packed, frames: self.forward(packed, frames,
+                                                      interpret=interpret)
         if mesh is not None and mesh.devices.size > 1:
             from jax.sharding import PartitionSpec as P
             from repro.distributed import context as dctx
@@ -290,11 +383,20 @@ class InferencePlan:
 
 @functools.lru_cache(maxsize=64)
 def compile_plan(program: isa.Program) -> InferencePlan:
-    """Resolve a program's geometry into a static packed-stage pipeline."""
+    """Resolve a program's geometry into a static packed-stage pipeline.
+
+    Alongside the staged stage chain (one fused Pallas call per layer,
+    kept as the fallback + oracle), the plan carries the megakernel's
+    static stage spec — the same geometry lowered for the single
+    resident ``pallas_call`` (``kernels.megakernel``).
+    """
     stages = []
-    for (ins, _in_h, _in_w, in_c, _oh, _ow, _oc) in isa.layer_geometry(program):
+    mega = []
+    for (ins, in_h, in_w, in_c, _oh, _ow, _oc) in isa.layer_geometry(program):
         if isinstance(ins, isa.IOInstr):
             stages.append(_IOStage(bits=ins.bits, channels=ins.channels))
+            mega.append(("io", ins.height, ins.width, ins.in_channels,
+                         ins.bits, ins.channels))
         elif isinstance(ins, isa.ConvInstr):
             if ins.features % binarize.PACK_WIDTH:
                 raise isa.ProgramError(
@@ -302,13 +404,18 @@ def compile_plan(program: isa.Program) -> InferencePlan:
                     f"got {ins.features}")
             stages.append(_ConvStage(c=in_c, features=ins.features,
                                      pool=ins.maxpool))
+            mega.append(("conv", in_h, in_w, in_c, ins.features,
+                         ins.maxpool))
         else:
             pack_out = (not ins.final
                         and ins.out_features % binarize.PACK_WIDTH == 0)
             stages.append(_FCStage(in_features=ins.in_features,
                                    out_features=ins.out_features,
                                    final=ins.final, pack_out=pack_out))
-    return InferencePlan(program=program, stages=tuple(stages))
+            mega.append(("fc", ins.in_features, ins.out_features,
+                         ins.final, pack_out))
+    return InferencePlan(program=program, stages=tuple(stages),
+                         mega=tuple(mega))
 
 
 def forward_infer(folded, program: isa.Program, images: jax.Array,

@@ -65,19 +65,8 @@ def thermometer_encode_packed(images: jax.Array, bits: int,
     Returns (B, H, W, channels // 32) uint32 (channels is a multiple of
     32 for every array mode: 256/S with S in {1, 2, 4}).
     """
-    assert channels % binarize.PACK_WIDTH == 0, channels
-    b, h, w, cin = images.shape
-    per = channels // cin
-    levels = 2 ** bits
-    t = (jnp.arange(per, dtype=jnp.float32) + 0.5) * (levels / per)
-    x = images.astype(jnp.float32)[..., None]            # (B,H,W,Cin,1)
-    neg = (x < t).astype(jnp.uint32)                     # sign bit per plane
-    neg = neg.reshape(b, h, w, cin * per)
-    pad = channels - cin * per
-    if pad:                                              # +1 bias -> bit 0
-        neg = jnp.concatenate(
-            [neg, jnp.zeros((b, h, w, pad), neg.dtype)], axis=-1)
-    return binarize.pack_bit_lanes(neg)
+    return binarize.thermometer_pack(images, bits, images.shape[-1],
+                                     channels)
 
 
 # ---------------------------------------------------------------------------

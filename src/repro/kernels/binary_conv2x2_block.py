@@ -30,6 +30,40 @@ from repro.core.binarize import PACK_WIDTH, pack_bit_lanes
 from repro.kernels.binary_conv2x2 import accumulate_tap_popcounts
 
 
+def conv_block_body(a, w, tau, flip, *, k4: int, h: int, wd: int,
+                    pool: bool) -> jax.Array:
+    """The fused layer body on in-register values: conv -> threshold ->
+    pool -> repack.  Shared by the staged per-layer kernel below and the
+    whole-network megakernel (``kernels.megakernel``), so both paths run
+    the identical arithmetic and stay bit-exact against each other.
+
+    a:    (bb, H, W, Cw) uint32 packed input maps.
+    w:    (bf, 4, Cw)    uint32 packed weight taps, (dy, dx) row-major.
+    tau:  (bf,) int32 comparator thresholds; flip: (bf,) int32 direction.
+    Returns (bb, Ho, Wo, bf // 32) uint32 packed output words.
+    """
+    bb = a.shape[0]
+    bf = w.shape[0]
+    acc = accumulate_tap_popcounts(a, w, h, wd)
+    s = jnp.int32(k4) - 2 * acc                                # integer sums
+
+    # folded comparator, in-register: output is +1 iff (s >= tau) XOR flip;
+    # under the bit=1 <=> -1 convention the sign bit is the negation of that.
+    ge = (s >= tau[None, None, None, :]).astype(jnp.int32)
+    bits = (jnp.int32(1) - jnp.bitwise_xor(ge, flip[None, None, None, :])
+            ).astype(jnp.uint32)                               # (bb,H-1,W-1,bf)
+
+    if pool:
+        # streamed 2x2/2 max-pool in the sign domain: max over +/-1 == any
+        # +1 in the window == AND of the (negative-sign) bits.
+        ho, wo = (h - 1) // 2, (wd - 1) // 2
+        bits = bits[:, :ho * 2, :wo * 2, :].reshape(bb, ho, 2, wo, 2, bf)
+        bits = bits[:, :, 0] & bits[:, :, 1]
+        bits = bits[:, :, :, 0, :] & bits[:, :, :, 1, :]       # (bb, ho, wo, bf)
+
+    return pack_bit_lanes(bits)
+
+
 def _conv_block_kernel(a_ref, w_ref, tau_ref, flip_ref, out_ref, *,
                        k4: int, h: int, w: int, pool: bool):
     """One (f-tile, frame-tile) grid step.
@@ -39,28 +73,8 @@ def _conv_block_kernel(a_ref, w_ref, tau_ref, flip_ref, out_ref, *,
     tau_ref:  (1, bf) int32 comparator thresholds; flip_ref: (1, bf) int32.
     out_ref:  (bb, Ho, Wo, bf // 32) uint32 packed output words.
     """
-    bb = a_ref.shape[0]
-    bf = w_ref.shape[0]
-    acc = accumulate_tap_popcounts(a_ref[...], w_ref[...], h, w)
-    s = jnp.int32(k4) - 2 * acc                                # integer sums
-
-    # folded comparator, in-register: output is +1 iff (s >= tau) XOR flip;
-    # under the bit=1 <=> -1 convention the sign bit is the negation of that.
-    tau = tau_ref[0][None, None, None, :]
-    flip = flip_ref[0][None, None, None, :]
-    ge = (s >= tau).astype(jnp.int32)
-    bits = (jnp.int32(1) - jnp.bitwise_xor(ge, flip)
-            ).astype(jnp.uint32)                               # (bb,H-1,W-1,bf)
-
-    if pool:
-        # streamed 2x2/2 max-pool in the sign domain: max over +/-1 == any
-        # +1 in the window == AND of the (negative-sign) bits.
-        ho, wo = (h - 1) // 2, (w - 1) // 2
-        bits = bits[:, :ho * 2, :wo * 2, :].reshape(bb, ho, 2, wo, 2, bf)
-        bits = bits[:, :, 0] & bits[:, :, 1]
-        bits = bits[:, :, :, 0, :] & bits[:, :, :, 1, :]       # (bb, ho, wo, bf)
-
-    out_ref[...] = pack_bit_lanes(bits)
+    out_ref[...] = conv_block_body(a_ref[...], w_ref[...], tau_ref[0],
+                                   flip_ref[0], k4=k4, h=h, wd=w, pool=pool)
 
 
 @functools.partial(jax.jit,

@@ -1,0 +1,203 @@
+"""Pallas TPU megakernel: the whole network resident in VMEM, per frame tile.
+
+BinarEye "stores full network models and feature maps and hence requires no
+off-chip bandwidth": weights sit in the 259 kB SRAM, feature maps ping-pong
+between the west/east 32 kB feature SRAMs, and the only off-chip traffic is
+the image in and the label out.  The staged ``InferencePlan`` lost that on
+TPU — one ``pallas_call`` per layer means every packed feature map takes an
+HBM round trip between stages.  This kernel restores the chip's execution
+model in one ``pallas_call``:
+
+* **SRAM image in VMEM.**  All packed conv weight words + int32 comparator
+  thresholds + packed FC weights for *every* layer enter as VMEM-resident
+  operands (constant index maps: fetched once, resident across the grid) —
+  the TPU analogue of the weight SRAM contents.  For the worst chip shape
+  (cifar9 at S=1) the conv image is 8 x 256x4x8 words = 262 kB, within 1%
+  of the chip's 259 kB weight SRAM.
+* **Feature maps stay in VMEM.**  Inter-layer maps are kernel-resident
+  values — Mosaic allocates them out of VMEM, the analogue of the chip's
+  west/east feature SRAMs — and never touch HBM.  (An explicit ping-pong
+  scratch buffer would model the SRAM pair even more literally, but it
+  adds a write+read bounce per layer that is real extra VMEM traffic on
+  every backend, so the maps flow as values instead.)
+* **Double-buffered frame streaming.**  The grid iterates frame tiles;
+  raw frames stay in HBM (``memory_space=ANY``) and are streamed tile by
+  tile with manual ``make_async_copy``/wait into a 2-slot VMEM buffer, so
+  tile N+1 DMAs in while tile N computes; logits DMA out the same way.
+  The IO thermometer encode runs in-kernel on the raw integer pixels, so
+  the only HBM traffic of the whole network is frames in, logits out.
+
+The per-layer arithmetic is ``binary_conv2x2_block.conv_block_body`` — the
+exact function the staged path runs — so the two paths are bit-exact by
+construction (and tested, ``tests/test_megakernel.py``).
+
+VMEM budget: unlike the staged kernel, a conv layer here computes all F
+neurons in one step, so the dominant live value is the int32 accumulator
+``bb * (H-1) * (W-1) * F * 4B`` (~7.9 MB for cifar9-S1 at bb=8).  On a
+real TPU shrink ``bb`` first (bb=2 keeps the worst case under 2 MB); the
+weight image + streaming buffers are small (<1 MB total).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.binarize import (PACK_WIDTH, pack_bit_lanes,
+                                 thermometer_pack, xnor_dot_popcount)
+from repro.kernels.binary_conv2x2_block import conv_block_body
+
+# Static stage spec entries (hashable; built by interpreter.InferencePlan):
+#   ("io",   h, w, cin, bits, channels)
+#   ("conv", h, w, c, f, pool)            h/w = input map size
+#   ("fc",   k, n, final, pack_out)
+
+
+def _fc_body(x, wfc, k: int):
+    """Packed FC on values: (bb, Kw) x (N, Kw) -> (bb, N) int32 sums."""
+    return xnor_dot_popcount(x[:, None, :], wfc[None, :, :], k)
+
+
+def _run_stages(frames, cw, ct, cf, fw, spec):
+    """The whole-network pipeline on one VMEM-resident frame tile.
+
+    ``frames``: (bb, H, W, Cin) int32 raw pixels (already DMA'd to VMEM);
+    ``cw``/``ct``/``cf``: the conv SRAM image; ``fw``: the padded FC
+    image.  The feature map flows layer to layer as a VMEM-resident
+    value.  Returns (bb, classes) int32 logits.
+    """
+    ci = fi = 0
+    fm = None                      # packed spatial map, (bb, h, w, Cw)
+    x = None                       # packed FC row words once spatial ends
+    logits = None
+    for st in spec:
+        if st[0] == "io":
+            _, h, w, cin, bits, channels = st
+            # the staged path's exact IO arithmetic, run in-kernel
+            fm = thermometer_pack(frames, bits, cin, channels)
+        elif st[0] == "conv":
+            _, h, w, c, f, pool = st
+            fm = conv_block_body(fm, cw[ci], ct[ci], cf[ci],
+                                 k4=4 * c, h=h, wd=w, pool=pool)
+            ci += 1
+        else:
+            _, k, n, final, pack_out = st
+            kw = -(-k // PACK_WIDTH)
+            if x is None:          # flatten the last spatial map into rows
+                # (bb, h, w, Cw) words flatten directly into packed FC
+                # rows: F % 32 == 0 makes word order the channel order.
+                x = fm.reshape(fm.shape[0], -1)
+            s = _fc_body(x, fw[fi, :n, :kw], k)
+            if final:
+                logits = s
+            elif n % PACK_WIDTH == 0:
+                x = pack_bit_lanes((s < 0).astype(jnp.uint32))
+            else:                  # odd-width hidden FC: sign, pad, repack
+                bits_ = (s < 0).astype(jnp.uint32)
+                padn = (-n) % PACK_WIDTH
+                bits_ = jnp.pad(bits_, ((0, 0), (0, padn)))
+                x = pack_bit_lanes(bits_)
+            fi += 1
+    return logits
+
+
+def _mega_kernel(frames_hbm, cw_ref, ct_ref, cf_ref, fw_ref, out_hbm,
+                 fbuf, obuf, in_sem, out_sem, *,
+                 spec, bb: int, n_tiles: int):
+    """One frame-tile grid step with 2-slot input/output DMA pipelining."""
+    i = pl.program_id(0)
+    slot = jax.lax.rem(i, 2)
+    nxt = jax.lax.rem(i + 1, 2)
+
+    def in_copy(s, t):
+        return pltpu.make_async_copy(
+            frames_hbm.at[pl.ds(t * bb, bb)], fbuf.at[s], in_sem.at[s])
+
+    def out_copy(s, t):
+        return pltpu.make_async_copy(
+            obuf.at[s], out_hbm.at[pl.ds(t * bb, bb)], out_sem.at[s])
+
+    @pl.when(i == 0)                     # warm-up: tile 0 streams in
+    def _():
+        in_copy(0, 0).start()
+
+    @pl.when(i + 1 < n_tiles)            # tile N+1 streams while N computes
+    def _():
+        in_copy(nxt, jnp.minimum(i + 1, n_tiles - 1)).start()
+
+    in_copy(slot, i).wait()
+    logits = _run_stages(fbuf[slot], cw_ref[...], ct_ref[...], cf_ref[...],
+                         fw_ref[...], spec)
+
+    if n_tiles > 2:                      # drain the DMA issued 2 tiles ago
+        @pl.when(i >= 2)                 # before reusing its slot
+        def _():
+            out_copy(slot, jnp.maximum(i - 2, 0)).wait()
+    obuf[slot] = logits
+    out_copy(slot, i).start()
+
+    @pl.when(i == n_tiles - 1)           # final tile: drain everything
+    def _():
+        out_copy(slot, i).wait()
+    if n_tiles > 1:
+        @pl.when(i == n_tiles - 1)
+        def _():
+            out_copy(1 - slot, i - 1).wait()
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "bb", "interpret"))
+def megakernel_forward(image, frames: jax.Array, *, spec,
+                       bb: int = 8, interpret: bool = False) -> jax.Array:
+    """Whole-network packed inference in a single resident ``pallas_call``.
+
+    image:  the weight-image artifact (``interpreter.fold_params(...,
+            image=True)``): ``cw`` (n_conv, F, 4, Cw) uint32 conv words,
+            ``ct``/``cf`` (n_conv, F) int32 thresholds/directions,
+            ``fw`` (n_fc, Nmax, Kwmax) uint32 padded FC words.
+    frames: (B, H, W, Cin) integer images.
+    spec:   static stage tuple from ``InferencePlan.mega``.
+    bb:     frame-tile size (the double-buffered streaming granule).
+    Returns (B, classes) int32 logits.
+    """
+    io = spec[0]
+    assert io[0] == "io", spec
+    h, w, cin = io[1], io[2], io[3]
+    final = spec[-1]
+    assert final[0] == "fc" and final[3], spec
+    ncls = final[2]
+
+    b = frames.shape[0]
+    bb = min(bb, b)
+    bp = (-b) % bb
+    frames = frames.astype(jnp.int32)
+    if bp:                               # ragged final tile: pad, trim below
+        frames = jnp.pad(frames, ((0, bp), (0, 0), (0, 0), (0, 0)))
+    n_tiles = frames.shape[0] // bb
+
+    def resident(arr):                   # whole array, fetched once
+        nd = arr.ndim
+        return pl.BlockSpec(arr.shape, lambda i, _n=nd: (0,) * _n)
+
+    out = pl.pallas_call(
+        functools.partial(_mega_kernel, spec=spec, bb=bb, n_tiles=n_tiles),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),      # frames stay in HBM
+            resident(image["cw"]), resident(image["ct"]),
+            resident(image["cf"]), resident(image["fw"]),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((frames.shape[0], ncls), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((2, bb, h, w, cin), jnp.int32),     # frame tiles
+            pltpu.VMEM((2, bb, ncls), jnp.int32),          # logit tiles
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(frames, image["cw"], image["ct"], image["cf"], image["fw"])
+    return out[:b]

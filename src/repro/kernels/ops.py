@@ -14,6 +14,7 @@ from repro.core import binarize
 from repro.kernels import binarize_pack as _bp
 from repro.kernels import binary_conv2x2 as _bc
 from repro.kernels import binary_conv2x2_block as _bcb
+from repro.kernels import megakernel as _mk
 from repro.kernels import xnor_matmul as _xm
 
 
@@ -58,6 +59,21 @@ def binary_conv2x2_block(a_words: jax.Array, w_words: jax.Array,
         interpret = default_interpret()
     return _bcb.binary_conv2x2_block(a_words, w_words, tau, flip, c=c,
                                      pool=pool, interpret=interpret, **tiles)
+
+
+def megakernel_forward(image, frames: jax.Array, *, spec, bb: int = 8,
+                       interpret: bool | None = None) -> jax.Array:
+    """Whole-network VMEM-resident inference: raw frames -> int32 logits.
+
+    One ``pallas_call`` runs every stage of the compiled plan (``spec``
+    from ``InferencePlan.mega``) with the full weight image resident in
+    VMEM, feature maps in VMEM scratch and frame tiles of ``bb``
+    double-buffered through the grid — no HBM traffic between layers.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _mk.megakernel_forward(image, frames, spec=spec, bb=bb,
+                                  interpret=interpret)
 
 
 def binary_linear(x: jax.Array, w_signs: jax.Array, *,

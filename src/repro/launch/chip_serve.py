@@ -66,6 +66,13 @@ def main(argv=None):
                     help="serve over all local devices (frames scattered)")
     ap.add_argument("--donate", action="store_true",
                     help="donate streamed frame buffers to the computation")
+    ap.add_argument("--megakernel", action="store_true",
+                    help="serve through the whole-network VMEM-resident "
+                         "megakernel (weight image resident, zero HBM "
+                         "traffic between layers)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="double-buffer submission: stage batch N+1 while "
+                         "batch N runs, block only on fetch")
     ap.add_argument("--no-warm-bn", action="store_true",
                     help="skip the one-batch BN warm (faster, cruder "
                          "thresholds)")
@@ -86,9 +93,11 @@ def main(argv=None):
     mesh = sharding.serve_mesh() if args.shard else None
     ndev = mesh.devices.size if mesh is not None else 1
     server = ChipServer(programs, artifacts, batch=args.batch, mesh=mesh,
-                        donate_frames=args.donate)
+                        donate_frames=args.donate,
+                        megakernel=args.megakernel, prefetch=args.prefetch)
     print(f"resident programs: {names}  (batch={args.batch}, "
-          f"devices={ndev}, S-modes={[programs[n].s for n in names]})")
+          f"devices={ndev}, S-modes={[programs[n].s for n in names]}, "
+          f"megakernel={args.megakernel}, prefetch={args.prefetch})")
 
     # interleaved synthetic streams: round-robin submission across programs
     per = {n: frame_stream(programs[n], -(-args.requests // len(names)),

@@ -66,7 +66,7 @@ def _shifted(x, shift_state):
     return jnp.concatenate([prev, x[:, :-1]], axis=1)
 
 
-def _wkv_chunked(rh, kh, vh, wh, u, S0, chunk: int):
+def _wkv_chunked(rh, kh, vh, wh, u, S0, chunk: int, sub_chunk: int = 16):
     """GLA-style chunked WKV: identical math to the per-token scan, but the
     (B,H,hs,hs) state round-trips HBM once per CHUNK instead of once per
     token, and the chunk-crossing terms run as (C,C) masked matmuls on the
@@ -78,22 +78,30 @@ def _wkv_chunked(rh, kh, vh, wh, u, S0, chunk: int):
     With P_t = prod_{s<=t} w_s (la = cumsum log w), r~_t = r_t * P_{t-1}:
         y      = r~ @ S_in + intra-chunk causal term + bonus-diag
         S_out  = P_last o S_in + sum_s exp(la_last - la_s) k_s (x) v_s
-    The intra-chunk pair (c, s<c) needs exp(la_{c-1} - la_s) per channel.
-    The factored form r~ @ (k exp(-la))^T overflows fp32 once a channel
-    decays past e^-88 within a chunk (the seed clamped la at -20, which
-    made strongly-decayed channels *wrong*, not just clamped); instead the
-    pairwise exponent la_{c-1,i} - la_{s,i} <= 0 is formed directly and
-    masked to s < c before the exp, so every factor is <= 1 and the
-    chunked path matches the per-token scan on any decay range (verified
-    in tests/test_rwkv_chunked.py).  Cost of exactness: the intra-chunk
-    term materializes a (B,H,C,C,hs) decay tensor per chunk instead of a
-    (C,C) matmul — acceptable at the chunk sizes used here (<= 64); the
-    known cheaper-at-scale form is FLA-style secondary sub-chunking
-    (factored matmuls rebased at sub-chunk boundaries, exact einsum only
-    within a sub-chunk), queued in ROADMAP.
+    The intra-chunk pair (t, s<t) needs exp(la_{t-1} - la_s) per channel.
+    The naive factored form r~ @ (k exp(-la))^T overflows fp32 once a
+    channel decays past e^-88 within a chunk (the seed clamped la at -20,
+    which made strongly-decayed channels *wrong*, not just clamped).  The
+    FLA-style fix: split the chunk into sub-chunks of ``sub_chunk`` and
+    *rebase* the factored exponents at each target sub-chunk's entry
+    decay E_i = la at its first step:
+
+        exp(la_{t-1} - la_s) = exp(la_{t-1} - E_i) * exp(E_i - la_s)
+
+    For any source s *before* sub-chunk i both factors are <= 1 (la is
+    non-increasing), so cross-sub-chunk scores run as plain (c, C)
+    matmuls with no overflow and no clamp; only pairs *inside* a
+    sub-chunk form the pairwise exponent exactly, materializing a
+    (c, c, hs) decay tensor instead of the old (C, C, hs) — a
+    ``chunk/sub_chunk`` memory reduction at identical accuracy (matches
+    the per-token scan on any decay range, tests/test_rwkv_chunked.py).
+    A ``sub_chunk`` that does not divide ``chunk`` falls back to one
+    exact sub-chunk spanning the whole chunk.
     """
     b, s, nh, hs = rh.shape
     n = s // chunk
+    sub = sub_chunk if (sub_chunk and chunk % sub_chunk == 0) else chunk
+    m = chunk // sub
     # (n, B, H, C, hs) chunk-major layout
     def chunked(t):
         return t.reshape(b, n, chunk, nh, hs).transpose(1, 0, 3, 2, 4)
@@ -108,18 +116,40 @@ def _wkv_chunked(rh, kh, vh, wh, u, S0, chunk: int):
     k_out = kc * jnp.exp(la[..., -1:, :] - la)             # for S_out (<=1)
     p_last = jnp.exp(la[..., -1, :])                       # (n,B,H,hs)
 
-    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), -1)
+    sub_mask = jnp.tril(jnp.ones((sub, sub), jnp.bool_), -1)
+    # cross mask: target sub-chunk i sees sources strictly before its entry
+    cross_mask = (jnp.arange(chunk)[None, :]
+                  < (jnp.arange(m) * sub)[:, None]).astype(rh.dtype)
 
     def body(S, inp):
         r_t, v_t, k_o, p_l, r_raw, k_raw, la_c, la_p = inp
+        bb, hh = r_raw.shape[0], r_raw.shape[1]
         y_state = jnp.einsum("bhci,bhij->bhcj", r_t, S)
-        # exact per-pair decay exp(la_{c-1,i} - la_{s,i}), masked to s < c
-        # pre-exp so the exponent is always <= 0 (no overflow, no clamp)
-        diff = la_p[..., :, None, :] - la_c[..., None, :, :]  # (B,H,C,S,hs)
-        decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff,
-                                  -jnp.inf))
-        scores = jnp.einsum("bhci,bhcsi,bhsi->bhcs", r_raw, decay, k_raw)
-        y_intra = jnp.einsum("bhcs,bhsj->bhcj", scores, v_t)
+
+        def subs(t):                                   # (B,H,m,c,hs)
+            return t.reshape(bb, hh, m, sub, hs)
+        rr, kr, vr = subs(r_raw), subs(k_raw), subs(v_t)
+        la_r, la_pr = subs(la_c), subs(la_p)
+        # exact per-pair decay inside each sub-chunk: exponent always <= 0
+        diff = la_pr[..., :, None, :] - la_r[..., None, :, :]  # (B,H,m,c,c,hs)
+        decay = jnp.exp(jnp.where(sub_mask[None, None, None, :, :, None],
+                                  diff, -jnp.inf))
+        scores_d = jnp.einsum("bhmti,bhmtsi,bhmsi->bhmts", rr, decay, kr)
+        y_intra = jnp.einsum("bhmts,bhmsj->bhmtj", scores_d, vr)
+        if m > 1:
+            # cross-sub-chunk pairs: rebase at the target sub-chunk entry
+            # E_i; both factors <= 1 for every *used* (masked-in) pair, so
+            # the scores are plain matmuls (the minimum() only clamps
+            # masked-out columns, where la may exceed E_i).
+            e_i = la_pr[..., :, 0, :]                      # (B,H,m,hs)
+            r_reb = rr * jnp.exp(la_pr - e_i[..., :, None, :])
+            k_reb = k_raw[:, :, None, :, :] * jnp.exp(jnp.minimum(
+                e_i[..., :, None, :] - la_c[..., None, :, :], 0.0))
+            scores_x = jnp.einsum("bhmti,bhmsi->bhmts", r_reb, k_reb)
+            scores_x = scores_x * cross_mask[None, None, :, None, :]
+            y_intra = y_intra + jnp.einsum("bhmts,bhsj->bhmtj",
+                                           scores_x, v_t)
+        y_intra = y_intra.reshape(bb, hh, chunk, hs)
         y_bonus = jnp.einsum("bhci,bhci->bhc", r_raw * u[None, :, None, :],
                              k_raw)[..., None] * v_t
         S = p_l[..., :, None] * S + jnp.einsum("bhci,bhcj->bhij", k_o, v_t)
@@ -178,7 +208,8 @@ def time_mix(params, cfg, x, *, state=None, mode="train"):
         S, y = step(S0, (rh[:, 0], kh[:, 0], vh[:, 0], wh[:, 0]))
         y = y[:, None]
     elif chunk and s % chunk == 0:
-        S, y = _wkv_chunked(rh, kh, vh, wh, u, S0, chunk)
+        S, y = _wkv_chunked(rh, kh, vh, wh, u, S0, chunk,
+                            sub_chunk=getattr(rc, "sub_chunk", 16))
     else:
         S, ys = jax.lax.scan(
             step, S0, (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),

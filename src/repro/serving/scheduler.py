@@ -23,6 +23,20 @@ Multi-device: pass ``mesh`` (see ``distributed.sharding.serve_mesh``) to
 replicate every program's packed weights per device and scatter the frame
 batch on the batch axis via ``shard_map`` — the LD-once/CONV-many
 schedule lifted to the device level.  Single device degrades to plain jit.
+
+Two further deployment knobs mirror the chip's always-on pipelining:
+
+* ``megakernel=True`` runs each dispatch through the whole-network
+  resident Pallas kernel (``InferencePlan.forward_mega``): the program's
+  full weight image stays VMEM-resident, feature maps never leave VMEM,
+  and frame tiles double-buffer through the kernel grid.
+* ``prefetch=True`` double-buffers *submission*: while batch N runs on
+  the device, batch N+1 is already pulled from the queue, padded and
+  dispatched; the host blocks only when fetching N's results — the TPU
+  analogue of the chip loading the next image through the IO pads while
+  the array convolves the current one.  Dispatch order (and hence the
+  scheduler's fairness contract) is unchanged: batches are pulled from
+  the ``FrameQueue`` in exactly the same order as the synchronous path.
 """
 
 from __future__ import annotations
@@ -137,6 +151,7 @@ class ChipServer:
                  artifacts: Mapping[str, Any], *, batch: int = 8,
                  mesh=None, donate_frames: bool = False,
                  interpret: Optional[bool] = None,
+                 megakernel: bool = False, prefetch: bool = False,
                  f_hz: float = energy.F_EMIN):
         if set(programs) != set(artifacts):
             raise ValueError(
@@ -151,6 +166,7 @@ class ChipServer:
         self.batch = batch
         self.mesh = mesh
         self.f_hz = f_hz
+        self.prefetch = prefetch
         self.programs: Dict[str, isa.Program] = dict(programs)
         self.plans: Dict[str, interpreter.InferencePlan] = {}
         self.artifacts: Dict[str, Any] = {}
@@ -159,7 +175,10 @@ class ChipServer:
         for name, prog in self.programs.items():
             isa.validate(prog)
             plan = interpreter.compile_plan(prog)
-            art = interpreter.ensure_packed(artifacts[name])
+            if megakernel:
+                art = interpreter.ensure_image(artifacts[name], prog)
+            else:
+                art = interpreter.ensure_packed(artifacts[name])
             if mesh is not None:
                 art = sharding.replicate_artifact(mesh, art)
             io = prog.instrs[0]
@@ -167,7 +186,10 @@ class ChipServer:
             self.artifacts[name] = art
             self._geom[name] = (io.height, io.width, io.in_channels)
             self._fns[name] = plan.make_serve_fn(
-                mesh=mesh, donate_frames=donate_frames, interpret=interpret)
+                mesh=mesh, donate_frames=donate_frames, interpret=interpret,
+                megakernel=megakernel,
+                bb=min(8, batch // ndev))
+        self._inflight: Optional[Dict[str, Any]] = None
         self.queue = FrameQueue(self.programs)
         # static per-program chip reports: computed once, reused by stats()
         self._reports = {n: energy.analyze_net(p, f_hz)
@@ -202,12 +224,14 @@ class ChipServer:
 
     # -- dispatch side ------------------------------------------------------
 
-    def step(self) -> List[FrameResult]:
-        """One dispatch: pull a static batch, run its program, return
-        results for the real (non-padding) frames.  [] once drained."""
+    def _launch(self) -> Optional[Dict[str, Any]]:
+        """Pull + pad + dispatch one static batch; returns the in-flight
+        handle (device arrays, not yet synced) or ``None`` when drained.
+        Serving counters are billed at launch — the energy is burned the
+        moment the batch hits the array, synced or not."""
         pulled = self.queue.next_batch(self.batch)
         if pulled is None:
-            return []
+            return None
         name, reqs = pulled
         n_real = len(reqs)
         frames = np.stack([r.frame for r in reqs])
@@ -220,18 +244,46 @@ class ChipServer:
         frames = jnp.asarray(frames)
         if self.mesh is not None:
             frames = sharding.scatter_frames(self.mesh, frames)
-        t0 = time.perf_counter()
         logits, labels = self._fns[name](self.artifacts[name], frames)
-        labels = np.asarray(jax.block_until_ready(labels))
-        logits = np.asarray(logits)
-        self._host_wall_s += time.perf_counter() - t0
         self._served[name] += n_real
         self._padded[name] += self.batch - n_real
         dispatch = self._dispatches
         self._dispatches += 1
+        return dict(name=name, reqs=reqs, logits=logits, labels=labels,
+                    dispatch=dispatch)
+
+    def _finish(self, handle: Dict[str, Any]) -> List[FrameResult]:
+        """Block on an in-flight dispatch and materialize its results."""
+        name, reqs = handle["name"], handle["reqs"]
+        labels = np.asarray(jax.block_until_ready(handle["labels"]))
+        logits = np.asarray(handle["logits"])
         return [FrameResult(rid=r.rid, program=name, label=int(labels[i]),
-                            logits=logits[i], dispatch=dispatch)
+                            logits=logits[i], dispatch=handle["dispatch"])
                 for i, r in enumerate(reqs)]
+
+    def step(self) -> List[FrameResult]:
+        """One dispatch: pull a static batch, run its program, return
+        results for the real (non-padding) frames.  [] once drained.
+
+        With ``prefetch=True`` the next batch is staged and dispatched
+        *before* blocking on the current one, so host-side frame staging
+        overlaps device execution; batches still leave the queue in
+        exactly the synchronous order, so fairness is untouched.
+        """
+        t0 = time.perf_counter()
+        try:
+            if not self.prefetch:
+                cur = self._launch()
+                return [] if cur is None else self._finish(cur)
+            cur, self._inflight = self._inflight, None
+            if cur is None:
+                cur = self._launch()
+                if cur is None:
+                    return []
+            self._inflight = self._launch()    # stage N+1 while N runs
+            return self._finish(cur)
+        finally:
+            self._host_wall_s += time.perf_counter() - t0
 
     def drain(self) -> List[FrameResult]:
         """Serve until the queue is empty; results in dispatch order."""

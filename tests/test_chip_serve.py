@@ -153,6 +153,64 @@ def test_server_guards():
         server.queue.submit(FrameRequest(rid=0, program="ghost", frame=None))
 
 
+def test_prefetch_serves_identical_results(multi_setup):
+    """prefetch=True (stage batch N+1 while N runs) returns the exact
+    result stream of the synchronous server: same labels/logits, same
+    dispatch indices, same padding bill — the overlap is pure host-side
+    pipelining, dispatch order never changes."""
+    progs, arts = multi_setup
+    frames = {n: _frames(p, 5, seed=30 + i)
+              for i, (n, p) in enumerate(progs.items())}
+    runs = {}
+    for prefetch in (False, True):
+        server = ChipServer(progs, arts, batch=2, interpret=True,
+                            prefetch=prefetch)
+        for i in range(5):
+            for n in progs:
+                server.submit(n, frames[n][i])
+        runs[prefetch] = (server.drain(), server.stats())
+    (res_s, stats_s), (res_p, stats_p) = runs[False], runs[True]
+    assert [(r.rid, r.program, r.label, r.dispatch) for r in res_s] == \
+           [(r.rid, r.program, r.label, r.dispatch) for r in res_p]
+    for a, b in zip(res_s, res_p):
+        np.testing.assert_array_equal(a.logits, b.logits)
+    assert stats_s.served == stats_p.served
+    assert stats_s.padded == stats_p.padded
+    assert stats_s.dispatches == stats_p.dispatches
+
+
+def test_prefetch_interleaved_with_submission(mnist_setup):
+    """step()-at-a-time with new frames arriving between steps: every
+    frame is still served exactly once, in arrival order per program."""
+    program, packed, frames, _, labels_ref = mnist_setup
+    server = ChipServer({"m": program}, {"m": packed}, batch=2,
+                        interpret=True, prefetch=True)
+    got = []
+    for i in range(len(frames)):
+        server.submit("m", frames[i])
+        got.extend(server.step())
+    got.extend(server.drain())
+    assert [r.rid for r in got] == list(range(len(frames)))
+    np.testing.assert_array_equal(np.array([r.label for r in got]),
+                                  labels_ref)
+
+
+def test_megakernel_server_matches_staged(mnist_setup):
+    """megakernel=True serving (weight image resident, zero inter-layer
+    HBM) is bit-exact vs the staged server — with and without prefetch."""
+    program, packed, frames, logits_ref, labels_ref = mnist_setup
+    for prefetch in (False, True):
+        server = ChipServer({"m": program}, {"m": packed}, batch=2,
+                            interpret=True, megakernel=True,
+                            prefetch=prefetch)
+        server.submit_many("m", frames)
+        results = server.drain()
+        np.testing.assert_array_equal(
+            np.array([r.label for r in results]), labels_ref)
+        np.testing.assert_array_equal(
+            np.stack([r.logits for r in results]), logits_ref)
+
+
 # ---------------------------------------------------------------------------
 # 2. Scheduler properties (pure Python, no device work)
 # ---------------------------------------------------------------------------

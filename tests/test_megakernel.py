@@ -1,0 +1,192 @@
+"""Whole-network megakernel: bit-exactness + weight image + streaming.
+
+The acceptance property of the all-memory-on-chip lowering: for every
+benchmark program the single resident ``pallas_call``
+(``InferencePlan.forward_mega`` — weight image VMEM-resident, feature
+maps in VMEM scratch, frame tiles double-buffered through the grid)
+agrees *bit-exactly* with both the staged packed pipeline and the float
++/-1 reference interpreter — for any frame-tile size ``bb``, including
+ragged final tiles and random valid ISA programs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize
+from repro.core.chip import energy, interpreter, isa, networks
+from tests.test_fold_pack_property import _random_bn_params, random_program
+
+
+def _images(program, b=2, seed=0):
+    io = program.instrs[0]
+    return jax.random.randint(jax.random.PRNGKey(seed),
+                              (b, io.height, io.width, io.in_channels),
+                              0, 2 ** io.bits)
+
+
+def _trained(program, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = interpreter.init_params(key, program)
+    _, params = interpreter.forward_train(params, program,
+                                          _images(program, b=4, seed=1))
+    return params
+
+
+# The S=1/S=2 nets are interpret-mode heavyweights; keep the fast tier on
+# the S=4 family and sweep the full registry in the slow job.
+_SLOW = {"cifar9_s1", "cifar9_s2", "face_angles", "owner_detector"}
+
+
+@pytest.mark.parametrize(
+    "name", [pytest.param(n, marks=pytest.mark.slow) if n in _SLOW
+             else n for n in sorted(networks.REGISTRY)])
+def test_megakernel_bit_exact_on_every_registry_program(name):
+    """megakernel == staged plan == float oracle, logits and labels."""
+    program = networks.REGISTRY[name]()
+    params = _trained(program)
+    folded = interpreter.fold_params(params, program)
+    packed = interpreter.fold_params(params, program, packed=True)
+    image = interpreter.fold_params(params, program, image=True)
+    imgs = _images(program, b=3, seed=7)           # 3 % bb=2 -> ragged tile
+
+    logits_ref, labels_ref = interpreter.forward_infer(
+        folded, program, imgs, use_kernels=False)
+    plan = interpreter.compile_plan(program)
+    logits_st, labels_st = plan.forward(packed, imgs, interpret=True)
+    logits_mg, labels_mg = plan.forward_mega(image, imgs, interpret=True,
+                                             bb=2)
+
+    np.testing.assert_array_equal(np.asarray(logits_mg),
+                                  np.asarray(logits_st))
+    np.testing.assert_array_equal(np.asarray(logits_mg),
+                                  np.asarray(logits_ref))
+    np.testing.assert_array_equal(np.asarray(labels_mg),
+                                  np.asarray(labels_ref))
+
+
+def test_megakernel_frame_tile_sizes_and_ragged_tiles():
+    """Any bb (dividing or ragged, larger than the batch, bb=1): identical
+    logits — tiling is a pure streaming schedule, not a numeric choice."""
+    program = networks.mnist5()
+    params = _trained(program, seed=3)
+    packed = interpreter.fold_params(params, program, packed=True)
+    image = interpreter.fold_params(params, program, image=True)
+    plan = interpreter.compile_plan(program)
+    imgs = _images(program, b=7, seed=11)
+    ref = np.asarray(plan.forward(packed, imgs, interpret=True)[0])
+    for bb in (1, 2, 3, 7, 16):
+        got = np.asarray(plan.forward_mega(image, imgs, interpret=True,
+                                           bb=bb)[0])
+        np.testing.assert_array_equal(got, ref, err_msg=f"bb={bb}")
+
+
+def test_weight_image_layout():
+    """fold_params(image=True) emits the documented VMEM-resident stack,
+    and its total size matches energy.hbm_traffic's weight_image bill."""
+    program = networks.mnist5()
+    params = _trained(program, seed=5)
+    packed = interpreter.fold_params(params, program, packed=True)
+    image = interpreter.fold_params(params, program, image=True)
+
+    n_conv = len(program.conv_instrs)
+    f = isa.ARRAY_CHANNELS // program.s
+    cw = f // binarize.PACK_WIDTH
+    assert image["cw"].shape == (n_conv, f, 4, cw)
+    assert image["cw"].dtype == jnp.uint32
+    assert image["ct"].shape == (n_conv, f) and image["ct"].dtype == jnp.int32
+    assert image["cf"].shape == (n_conv, f)
+    fcs = program.fc_instrs
+    n_max = max(i.out_features for i in fcs)
+    kw_max = max(-(-i.in_features // binarize.PACK_WIDTH) for i in fcs)
+    assert image["fw"].shape == (len(fcs), n_max, kw_max)
+    # the stacked words are the per-layer words, zero-padded
+    for i, p in enumerate(packed["conv"]):
+        np.testing.assert_array_equal(np.asarray(image["cw"][i]),
+                                      np.asarray(p["w_words"]))
+        np.testing.assert_array_equal(np.asarray(image["ct"][i]),
+                                      np.asarray(p["tau"]))
+    for i, p in enumerate(packed["fc"]):
+        n, kw_ = p["w_words"].shape
+        np.testing.assert_array_equal(np.asarray(image["fw"][i, :n, :kw_]),
+                                      np.asarray(p["w_words"]))
+    traffic = energy.hbm_traffic(program)
+    unpadded = (image["cw"].nbytes + image["ct"].nbytes + image["cf"].nbytes
+                + sum(p["w_words"].nbytes for p in packed["fc"]))
+    assert traffic.weight_image_bytes == unpadded
+
+
+def test_ensure_image_admits_every_artifact_form():
+    program = networks.mnist5()
+    params = _trained(program, seed=9)
+    folded = interpreter.fold_params(params, program)
+    packed = interpreter.pack_folded(folded)
+    image = interpreter.fold_params(params, program, image=True)
+    for art in (folded, packed, image):
+        got = interpreter.ensure_image(art, program)
+        for k in ("cw", "ct", "cf", "fw"):
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(image[k]))
+    with pytest.raises(TypeError, match="weight-image"):
+        interpreter.ensure_packed(image)           # no un-stacking seam
+
+
+def test_megakernel_zero_interlayer_hbm_claim():
+    """The traffic model agrees with the kernel's structure: megakernel
+    bytes = frames + weight image + logits, independent of depth."""
+    program = networks.cifar9(4)
+    t = energy.hbm_traffic(program, batch=16)
+    io = program.instrs[0]
+    frames = 16 * io.height * io.width * io.in_channels * 4
+    logits = 16 * program.instrs[-1].out_features * 4
+    assert t.mega_bytes == frames + t.weight_image_bytes + logits
+    assert t.staged_bytes > 5 * t.mega_bytes       # the eliminated traffic
+
+
+@settings(max_examples=12, deadline=None)
+@given(s=st.sampled_from([2, 4]), bb=st.sampled_from([1, 2, 3, 4, 8]),
+       b=st.integers(1, 9), seed=st.integers(0, 2 ** 16))
+def test_megakernel_matches_staged_on_random_programs(s, bb, b, seed):
+    """Property: random valid ISA program x random BN state x random batch
+    x random frame-tile size -> megakernel == staged plan, bit-exact.
+    Covers conv-only tails, hidden FCs (packed and odd-width), ragged
+    final tiles and bb > batch."""
+    program = random_program(s, seed)
+    params = _random_bn_params(program, seed)
+    packed = interpreter.fold_params(params, program, packed=True)
+    image = interpreter.fold_params(params, program, image=True)
+    plan = interpreter.compile_plan(program)
+    imgs = _images(program, b=b, seed=seed)
+
+    logits_st, labels_st = plan.forward(packed, imgs, interpret=True)
+    logits_mg, labels_mg = plan.forward_mega(image, imgs, interpret=True,
+                                             bb=bb)
+    np.testing.assert_array_equal(np.asarray(logits_mg),
+                                  np.asarray(logits_st))
+    np.testing.assert_array_equal(np.asarray(labels_mg),
+                                  np.asarray(labels_st))
+
+
+def test_megakernel_serve_fn_and_sharding(monkeypatch):
+    """make_serve_fn(megakernel=True) matches the staged serve fn on the
+    same frames — through the mesh path whatever jax.device_count() is."""
+    from repro.distributed import sharding
+    program = networks.mnist5()
+    params = _trained(program, seed=13)
+    packed = interpreter.fold_params(params, program, packed=True)
+    image = interpreter.fold_params(params, program, image=True)
+    plan = interpreter.compile_plan(program)
+    mesh = sharding.serve_mesh()
+    batch = 2 * mesh.devices.size
+    imgs = _images(program, b=batch, seed=17)
+
+    ref = plan.make_serve_fn(interpret=True)(packed, imgs)
+    for kw in (dict(), dict(mesh=mesh)):
+        got = plan.make_serve_fn(interpret=True, megakernel=True,
+                                 bb=2, **kw)(
+            sharding.replicate_artifact(mesh, image) if kw else image,
+            sharding.scatter_frames(mesh, imgs) if kw else imgs)
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))

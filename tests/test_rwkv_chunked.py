@@ -80,6 +80,57 @@ def test_chunked_matches_scan_property(chunk, nchunks, seed):
     np.testing.assert_allclose(S_c, S_ref, rtol=3e-4, atol=3e-4)
 
 
+@pytest.mark.parametrize("sub", [4, 8, 16, 32, 7])
+def test_sub_chunked_matches_scan(sub):
+    """FLA-style sub-chunking (cross-sub-chunk decay as rebased matmuls,
+    exact pairwise einsum only inside a sub-chunk) must match the scan on
+    any divisor — and fall back to the exact form on a non-divisor (7)."""
+    b, s, h, hs = 2, 64, 3, 8
+    chunk = 32
+    rh, kh, vh, wh, u = _rand_inputs(jax.random.PRNGKey(2), b, s, h, hs)
+    S0 = jax.random.normal(jax.random.PRNGKey(8), (b, h, hs, hs)) * 0.1
+    S_ref, y_ref = _scan_oracle(rh, kh, vh, wh, u, S0)
+    S_c, y_c = rwkv6._wkv_chunked(rh, kh, vh, wh, u, S0, chunk, sub_chunk=sub)
+    np.testing.assert_allclose(y_c, y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(S_c, S_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_sub_chunked_strong_decay_no_overflow():
+    """Channels decaying past e^-88 *within one chunk* — the regime where
+    the naive factored matmul form produces inf/NaN.  The rebased
+    sub-chunk factors are all <= 1, so the result stays finite and
+    matches the scan (this is the case that forced the seed's clamp)."""
+    b, s, h, hs = 1, 64, 2, 4
+    rh, kh, vh, wh, u = _rand_inputs(jax.random.PRNGKey(3), b, s, h, hs,
+                                     w_lo=0.01)    # e^-4.6 per step
+    S0 = jnp.zeros((b, h, hs, hs))
+    S_ref, y_ref = _scan_oracle(rh, kh, vh, wh, u, S0)
+    for sub in (4, 16):
+        S_c, y_c = rwkv6._wkv_chunked(rh, kh, vh, wh, u, S0, 64,
+                                      sub_chunk=sub)
+        assert np.all(np.isfinite(np.asarray(y_c)))
+        np.testing.assert_allclose(y_c, y_ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(S_c, S_ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(chunk=st.sampled_from([8, 16, 32]),
+       sub=st.sampled_from([2, 4, 8, 16]),
+       nchunks=st.integers(1, 3),
+       seed=st.integers(0, 2 ** 16))
+def test_sub_chunked_matches_scan_property(chunk, sub, nchunks, seed):
+    b, h, hs = 1, 2, 4
+    s = chunk * nchunks
+    rh, kh, vh, wh, u = _rand_inputs(jax.random.PRNGKey(seed), b, s, h, hs,
+                                     w_lo=0.2)
+    S0 = jnp.zeros((b, h, hs, hs))
+    S_ref, y_ref = _scan_oracle(rh, kh, vh, wh, u, S0)
+    S_c, y_c = rwkv6._wkv_chunked(rh, kh, vh, wh, u, S0, chunk,
+                                  sub_chunk=sub)
+    np.testing.assert_allclose(y_c, y_ref, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(S_c, S_ref, rtol=3e-4, atol=3e-4)
+
+
 def test_time_mix_chunk_flag_end_to_end():
     """time_mix(chunk=16) == time_mix(scan) through the full block path."""
     import dataclasses
