@@ -14,7 +14,13 @@ lowers through Mosaic):
 3. the whole-network **megakernel** (weight image VMEM-resident, feature
    maps in VMEM scratch, frame tiles double-buffered through one
    ``pallas_call``) vs the staged plan, with the HBM bytes each mode
-   moves (``energy.hbm_traffic``) — the all-memory-on-chip headline;
+   moves (``energy.hbm_traffic``) — the all-memory-on-chip headline.
+   Tile sizes come from the **persistent autotuner**
+   (``kernels.autotune``): the bench tunes (bb, ft) / (bf, bb) for its
+   programs on this backend, records the winners in the JSON cache
+   (``BENCH_autotune.json``, shipped next to the bench baseline and
+   uploaded as a CI artifact) and then benches through the cache-resolved
+   tiles — exactly the warm path a deployment hits;
 4. frames/sec of the deployed plan, the serving-throughput headline;
 5. frames/sec through the chip-tier serving subsystem (``ChipServer``):
    the same packed plan behind the request queue / static-batch
@@ -22,7 +28,14 @@ lowers through Mosaic):
    multi-program batching), with double-buffered submission
    (``prefetch=True``) — and, when more than one device is visible
    (e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``), over
-   the sharded serving mesh.
+   the sharded serving mesh;
+6. **shared-array dispatch**: four S=4 programs resident at once, served
+   time-interleaved (solo dispatches at 25% array occupancy) vs through
+   ``ChipServer(shared=True)`` composite dispatches (one ``pallas_call``
+   per batch runs all four sub-arrays concurrently) — the paired
+   speedup, both frames/s figures and the measured ``array_utilization``
+   go into the baseline, and the regression guard holds the speedup
+   floor at 1.0.
 
 Results go to ``BENCH_fresh.json`` (override with ``BENCH_KERNELS_JSON``);
 ``benchmarks/check_regression.py`` compares a fresh run against the
@@ -51,7 +64,7 @@ import numpy as np
 
 from repro.core import binarize
 from repro.core.chip import energy, interpreter, networks, neuron_array as na
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 from repro.kernels import binary_conv2x2 as _bc
 
 # default to a fresh-run file: the committed BENCH_kernels.json baseline
@@ -192,6 +205,14 @@ def _bench_pipeline(results):
     packed = interpreter.pack_folded(folded)
 
     plan = interpreter.compile_plan(program)
+    # tune the staged conv tiles for this (program, backend, batch) and
+    # bench through the cache so the trajectory tracks the warm path
+    tuned = autotune.tune_staged_conv(plan, packed, imgs,
+                                      bf_candidates=(32, 64),
+                                      bb_candidates=(8, 16), iters=2)
+    print(f"autotuned staged conv tiles: bf={tuned['bf']} bb={tuned['bb']}")
+    results["staged_conv_tuned_bf"] = tuned["bf"]
+    results["staged_conv_tuned_bb"] = tuned["bb"]
     # interpret=None -> per-backend choice: Python interpret on CPU,
     # Mosaic lowering on a real TPU (keeps the perf trajectory honest)
     fused = jax.jit(lambda pk, im: plan.forward(pk, im))
@@ -254,8 +275,16 @@ def _bench_megakernel(results):
     packed = interpreter.fold_params(params, program, packed=True)
     image = interpreter.build_weight_image(packed, program)
     plan = interpreter.compile_plan(program)
+    # tune (bb, ft) for this (program, backend, batch); the mega fn below
+    # resolves its tiles from the cache (bb=None/ft=None), i.e. the bench
+    # measures the autotuned f-tiled kernel a warm deployment runs
+    tuned = autotune.tune_mega(plan, image, imgs,
+                               bb_candidates=(4, 8, bb),
+                               ft_candidates=(0, 32), iters=2)
+    print(f"autotuned megakernel tiles: bb={tuned['bb']} ft={tuned['ft']}")
+    bb = tuned["bb"]
     staged = jax.jit(lambda pk, im: plan.forward(pk, im))
-    mega = jax.jit(lambda ig, im: plan.forward_mega(ig, im, bb=bb))
+    mega = jax.jit(lambda ig, im: plan.forward_mega(ig, im))
 
     # alternate the contenders rep by rep: each back-to-back pair sees the
     # same host load, so the *median of per-pair ratios* is a far less
@@ -297,6 +326,7 @@ def _bench_megakernel(results):
     results["megakernel_us"] = round(t_mega, 1)
     results["megakernel_staged_us"] = round(t_staged, 1)
     results["megakernel_bb"] = bb
+    results["megakernel_ft"] = tuned["ft"]
     results["megakernel_batch"] = batch
     results["megakernel_program"] = "cifar9_s4"
     results["megakernel_speedup_vs_staged"] = round(speedup, 2)
@@ -377,6 +407,93 @@ def _bench_serve(results):
     return ok
 
 
+def _bench_shared_serve(results):
+    """Shared-array dispatch: four S=4 programs resident at once, served
+    time-interleaved (each solo dispatch occupies one 64-channel
+    sub-array, 25% of the array) vs through ``ChipServer(shared=True)``
+    (one composite ``pallas_call`` per batch runs all four sub-arrays
+    concurrently).  Paired alternation gives a load-robust speedup; the
+    regression guard floors it at 1.0."""
+    from repro.launch import chip_serve
+    from repro.serving import ChipServer
+
+    batch, n_frames = 8, 16
+    progs = {"mnist5": networks.mnist5(),
+             "wake": networks.mnist5(classes=2),
+             "tri": networks.mnist5(classes=3),
+             "five": networks.mnist5(classes=5)}
+    arts, frames, oracle = {}, {}, {}
+    for i, (name, prog) in enumerate(progs.items()):
+        arts[name] = chip_serve.build_artifact(prog, seed=40 + i,
+                                               warm_bn=True)
+        frames[name] = chip_serve.frame_stream(prog, n_frames, seed=60 + i)
+        plan = interpreter.compile_plan(prog)
+        oracle[name] = np.asarray(
+            jax.jit(lambda pk, im, plan=plan: plan.forward(pk, im)[1])(
+                arts[name], jnp.asarray(frames[name])))
+
+    # tune the quad composite's (bb, ft) under its own fingerprint — the
+    # shared server resolves them from the cache at dispatch time
+    cplan, cimage = interpreter.pack_programs(progs, arts)
+    tuned = autotune.tune_composite(
+        cplan, cimage, tuple(jnp.asarray(frames[n][:batch]) for n in progs),
+        bb_candidates=(4, 8), ft_candidates=(0, 32), iters=2)
+    print(f"autotuned composite tiles: bb={tuned['bb']} ft={tuned['ft']}")
+    results["shared_composite_tuned_bb"] = tuned["bb"]
+    results["shared_composite_tuned_ft"] = tuned["ft"]
+
+    def make_server(shared):
+        server = ChipServer(progs, arts, batch=batch, shared=shared)
+        for n in progs:                        # warm the compile caches
+            server.submit_many(n, frames[n][:batch])
+        server.drain()
+        return server
+
+    def timed_drain(server):
+        t0 = time.perf_counter()
+        for i in range(n_frames):              # interleaved arrival
+            for n in progs:
+                server.submit(n, frames[n][i])
+        res = server.drain()
+        dt = time.perf_counter() - t0
+        per = {n: [] for n in progs}
+        for r in sorted(res, key=lambda r: r.rid):
+            per[r.program].append(r.label)
+        ok = all(np.array_equal(np.array(per[n]), oracle[n][:n_frames])
+                 for n in progs)
+        return len(res) / dt, dt, ok
+
+    solo, shared = make_server(False), make_server(True)
+    fps_solo = fps_shared = 0.0
+    ok = True
+    ratios = []
+    for _round in range(3):                    # paired rounds, same load
+        f_a, dt_a, ok_a = timed_drain(solo)
+        f_b, dt_b, ok_b = timed_drain(shared)
+        fps_solo, fps_shared = max(fps_solo, f_a), max(fps_shared, f_b)
+        ratios.append(dt_a / dt_b)
+        ok = ok and ok_a and ok_b
+    speedup = sorted(ratios)[len(ratios) // 2]
+    util_solo = solo.stats().array_utilization
+    util_shared = shared.stats().array_utilization
+
+    print(f"\n== Shared-array dispatch (4 x S=4 resident, batch={batch}) ==")
+    print(f"solo interleaved dispatch : {fps_solo:10,.0f} frames/s "
+          f"(array utilization {util_solo:.2f})")
+    print(f"shared composite dispatch : {fps_shared:10,.0f} frames/s "
+          f"(array utilization {util_shared:.2f}, {speedup:.2f}x)")
+    print(f"shared dispatch bit-exact vs solo oracle: {ok}")
+    results["serve_frames_per_s_solo4"] = round(fps_solo, 1)
+    results["serve_frames_per_s_shared"] = round(fps_shared, 1)
+    results["serve_shared_speedup_vs_solo"] = round(speedup, 2)
+    # array_utilization is the shared-dispatch path's occupancy (the CI
+    # headline); _solo4 is the time-interleaved control at 1/S
+    results["array_utilization"] = round(util_shared, 3)
+    results["array_utilization_solo4"] = round(util_solo, 3)
+    results["serve_shared_programs"] = len(progs)
+    return ok
+
+
 def run(csv: bool = True):
     import platform
     results = {"backend": jax.default_backend(),
@@ -389,7 +506,9 @@ def run(csv: bool = True):
     ok_pipe, speedup = _bench_pipeline(results)
     ok_mega = _bench_megakernel(results)
     ok_serve = _bench_serve(results)
-    ok = ok_mm and ok_pipe and ok_mega and ok_serve
+    ok_shared = _bench_shared_serve(results)
+    ok = ok_mm and ok_pipe and ok_mega and ok_serve and ok_shared
+    results["autotune_cache"] = autotune.cache_path()
 
     with open(BENCH_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -230,6 +230,22 @@ def hbm_traffic(p: isa.Program, batch: int = 1) -> TrafficReport:
                          weight_image_bytes=weight_bytes)
 
 
+def array_occupancy(programs) -> float:
+    """Fraction of the 256-channel array a set of *concurrently* running
+    programs occupies: each S-mode program claims a 256/S-channel
+    sub-array, so occupancy = sum(1/S).  A solo S=4 dispatch runs at
+    0.25; an exact shared-array tiling (4xS4, 2xS2, 2xS4+1xS2, ...) runs
+    at 1.0 — the serving scheduler averages this over dispatches as its
+    ``array_utilization`` figure.
+    """
+    occ = sum(1.0 / p.s for p in programs)
+    if occ > 1.0 + 1e-9:
+        raise isa.ProgramError(
+            f"programs with S modes {[p.s for p in programs]} oversubscribe "
+            f"the array: sum(1/S) = {occ:.2f} > 1")
+    return occ
+
+
 # ---------------------------------------------------------------------------
 # Serving-mix accounting: the chip time-shared across resident programs
 # ---------------------------------------------------------------------------

@@ -27,13 +27,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import binarize
 from repro.core.chip import isa, neuron_array as na
+from repro.kernels import autotune
 from repro.kernels import ops as kops
 
 BN_EPS = 1e-4
@@ -271,8 +272,17 @@ class InferencePlan:
     mega: Tuple[Any, ...] = ()   # static stage spec for the megakernel
 
     def forward(self, packed, images: jax.Array,
-                interpret: bool | None = None):
-        """Packed deployment forward. Returns (logits int32->f32, labels)."""
+                interpret: bool | None = None,
+                conv_tiles: Optional[Tuple[int, int]] = None):
+        """Packed deployment forward. Returns (logits int32->f32, labels).
+
+        ``conv_tiles`` overrides the fused conv kernel's (bf, bb) tile
+        sizes; default is the autotune cache's entry for this (program,
+        backend, batch), falling back to the kernel defaults when cold.
+        """
+        if conv_tiles is None:
+            conv_tiles = autotune.conv_tiles(self.program, images.shape[0])
+        bf, bb = conv_tiles
         ci = fi = 0
         x = logits = None
         for st in self.stages:
@@ -282,7 +292,7 @@ class InferencePlan:
                 p = packed["conv"][ci]
                 x = kops.binary_conv2x2_block(
                     x, p["w_words"], p["tau"], p["flip"], st.c,
-                    pool=st.pool, interpret=interpret)
+                    pool=st.pool, bf=bf, bb=bb, interpret=interpret)
                 ci += 1
             else:
                 if x.ndim == 4:
@@ -306,7 +316,8 @@ class InferencePlan:
         return logits, jnp.argmax(logits, axis=-1)
 
     def forward_mega(self, image, images: jax.Array,
-                     interpret: bool | None = None, bb: int = 8):
+                     interpret: bool | None = None,
+                     bb: Optional[int] = None, ft: Optional[int] = None):
         """Whole-network megakernel forward: one resident ``pallas_call``.
 
         ``image`` is the weight-image artifact (``fold_params(...,
@@ -314,15 +325,23 @@ class InferencePlan:
         VMEM-resident; inter-layer feature maps live in VMEM scratch and
         frame tiles of ``bb`` double-buffer through the grid, so the only
         HBM traffic is frames in, logits out (the chip's "no off-chip
-        bandwidth" execution model).  Bit-exact vs :meth:`forward`.
+        bandwidth" execution model).  Conv layers compute in f-tiles of
+        ``ft`` neurons (0 = all F per chunk — the VMEM-headroom knob for
+        wide S modes).  ``bb``/``ft`` left as ``None`` resolve through
+        the persistent autotune cache (``kernels.autotune``), falling
+        back to the historical defaults when cold.  Tile sizes are a pure
+        schedule choice: bit-exact vs :meth:`forward` for every setting.
         """
+        bb, ft = autotune.mega_tiles(self.program, images.shape[0],
+                                     bb=bb, ft=ft)
         logits = kops.megakernel_forward(image, images, spec=self.mega,
-                                         bb=bb, interpret=interpret)
+                                         bb=bb, ft=ft, interpret=interpret)
         logits = logits.astype(jnp.float32)
         return logits, jnp.argmax(logits, axis=-1)
 
     def make_fn(self, interpret: bool | None = None,
-                megakernel: bool = False, bb: int = 8):
+                megakernel: bool = False, bb: Optional[int] = None,
+                ft: Optional[int] = None):
         """jit: (artifact, images) -> (logits, labels).
 
         ``megakernel=True`` runs the whole-network resident kernel and
@@ -333,13 +352,14 @@ class InferencePlan:
         def fn(artifact, images):
             if megakernel:
                 return self.forward_mega(artifact, images,
-                                         interpret=interpret, bb=bb)
+                                         interpret=interpret, bb=bb, ft=ft)
             return self.forward(artifact, images, interpret=interpret)
         return fn
 
     def make_serve_fn(self, mesh=None, donate_frames: bool = False,
                       interpret: bool | None = None,
-                      megakernel: bool = False, bb: int = 8):
+                      megakernel: bool = False, bb: Optional[int] = None,
+                      ft: Optional[int] = None):
         """Serving entry point: jit'd (artifact, frames) -> (logits, labels).
 
         The deployment-side twin of :meth:`make_fn`, with two extra knobs
@@ -366,7 +386,7 @@ class InferencePlan:
         """
         if megakernel:
             fwd = lambda image, frames: self.forward_mega(
-                image, frames, interpret=interpret, bb=bb)
+                image, frames, interpret=interpret, bb=bb, ft=ft)
         else:
             fwd = lambda packed, frames: self.forward(packed, frames,
                                                       interpret=interpret)
@@ -416,6 +436,168 @@ def compile_plan(program: isa.Program) -> InferencePlan:
                          ins.final, pack_out))
     return InferencePlan(program=program, stages=tuple(stages),
                          mega=tuple(mega))
+
+
+# ---------------------------------------------------------------------------
+# Composite plans: true sub-array sharing across resident programs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompositePlan:
+    """Several programs compiled as ONE shared-array dispatch unit.
+
+    The chip's S-mode recombination runs its sub-arrays *concurrently*:
+    4xS4, 2xS2, 2xS4+1xS2, ... sub-arrays each execute their own program
+    on their own frame stream in the same cycle.  A
+    ``CompositePlan`` is the compiled form of that recombination: the
+    members' weight images pack side-by-side on the F axis into one
+    composite SRAM image (:func:`pack_programs`), each member's stages
+    carry static F/N offsets into it, and :meth:`forward` runs every
+    member's frames through ONE ``pallas_call`` per batch
+    (``kernels.megakernel.composite_forward``) — bit-exact vs dispatching
+    each member solo, but at full-array occupancy instead of 1/S.
+    """
+    names: Tuple[str, ...]
+    programs: Tuple[isa.Program, ...]
+    plans: Tuple[InferencePlan, ...]
+    spec: Tuple[Any, ...]          # per-member stage specs with offsets
+
+    @property
+    def classes(self) -> Tuple[int, ...]:
+        return tuple(sp[-1][2] for sp in self.spec)
+
+    def forward(self, image, frames, interpret: bool | None = None,
+                bb: Optional[int] = None, ft: Optional[int] = None):
+        """Shared dispatch: per-member frames -> per-member (logits, labels).
+
+        ``frames`` is a mapping keyed by member name or a sequence in
+        ``names`` order; member batches may be ragged (each is padded to
+        the longest internally, padding trimmed on return).  Returns
+        (logits, labels) as tuples in ``names`` order.  ``bb``/``ft``
+        default through the autotune cache under the composite's own
+        fingerprint.
+        """
+        if isinstance(frames, Mapping):
+            frames = tuple(frames[n] for n in self.names)
+        else:
+            frames = tuple(frames)
+        batch = max(f.shape[0] for f in frames)
+        bb, ft = autotune.composite_tiles(self.programs, batch, bb=bb, ft=ft)
+        outs = kops.composite_forward(image, frames, spec=self.spec,
+                                      bb=bb, ft=ft, interpret=interpret)
+        logits = tuple(o.astype(jnp.float32) for o in outs)
+        return logits, tuple(jnp.argmax(l, axis=-1) for l in logits)
+
+    def make_serve_fn(self, mesh=None, donate_frames: bool = False,
+                      interpret: bool | None = None,
+                      bb: Optional[int] = None, ft: Optional[int] = None):
+        """jit: (composite image, frames tuple) -> (logits, labels) tuples.
+
+        Mirrors :meth:`InferencePlan.make_serve_fn`: with a ``mesh`` the
+        composite image replicates per device and every member's frame
+        batch scatters on its own batch axis; donation covers the whole
+        frames tuple.
+        """
+        fwd = lambda image, frames: self.forward(image, frames,
+                                                 interpret=interpret,
+                                                 bb=bb, ft=ft)
+        if mesh is not None and mesh.devices.size > 1:
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed import context as dctx
+            axis = mesh.axis_names[0]
+            fwd = dctx.shard_map(fwd, mesh=mesh,
+                                 in_specs=(P(), P(axis)),
+                                 out_specs=(P(axis), P(axis)))
+        donate = (1,) if donate_frames else ()
+        return jax.jit(fwd, donate_argnums=donate)
+
+
+def pack_programs(programs: Mapping[str, isa.Program],
+                  artifacts: Mapping[str, Any]):
+    """Compile a shared-array composite: (CompositePlan, composite image).
+
+    ``programs`` maps member names to validated ISA programs whose
+    S-modes must tile the 256-channel array exactly (sum of 256/S == 256
+    — 4xS4, 2xS2, 2xS4+1xS2, ...); ``artifacts`` maps the same names to
+    any admissible artifact form (float-folded / packed / weight image).
+
+    The composite weight image packs the members side-by-side on the F
+    axis — the TPU analogue of loading several programs into disjoint
+    sub-array rows of the one weight SRAM:
+
+      ``cw``: (Lc, 256, 4, Cw_max) uint32, member m's conv-layer-i words
+          at rows [f_off_m, f_off_m + 256/S_m); rows past a member's
+          depth (or a member's unused trailing channel words) stay zero
+          and are never read — the kernel slices statically per member;
+      ``ct``/``cf``: (Lc, 256) int32 thresholds / directions, same rows;
+      ``fw``: (Lf, N_total, Kw_max) uint32 FC words, members side-by-side
+          on the N axis per FC ordinal.
+    """
+    names = tuple(programs)
+    if not names:
+        raise ValueError("pack_programs needs at least one program")
+    progs = tuple(programs[n] for n in names)
+    for p in progs:
+        isa.validate(p)
+    widths = [isa.ARRAY_CHANNELS // p.s for p in progs]
+    if len(progs) > 1 and sum(widths) != isa.ARRAY_CHANNELS:
+        raise isa.ProgramError(
+            f"S-modes {[p.s for p in progs]} do not tile the array "
+            f"exactly: sum(256/S) = {sum(widths)} != {isa.ARRAY_CHANNELS}")
+    plans = tuple(compile_plan(p) for p in progs)
+    images = [ensure_image(artifacts[n], p) for n, p in zip(names, progs)]
+
+    f_offs, off = [], 0
+    for w in widths:
+        f_offs.append(off)
+        off += w
+    ftot = off
+
+    lc = max(img["cw"].shape[0] for img in images)
+    kwc = max(img["cw"].shape[3] for img in images)
+    cw = jnp.zeros((lc, ftot, 4, kwc), jnp.uint32)
+    ct = jnp.zeros((lc, ftot), jnp.int32)
+    cf = jnp.zeros((lc, ftot), jnp.int32)
+    for img, fo in zip(images, f_offs):
+        ncm, fm, _, kwm = img["cw"].shape
+        cw = cw.at[:ncm, fo:fo + fm, :, :kwm].set(img["cw"])
+        ct = ct.at[:ncm, fo:fo + fm].set(img["ct"])
+        cf = cf.at[:ncm, fo:fo + fm].set(img["cf"])
+
+    # FC rows: true (N, Kw) per member per FC ordinal, packed side-by-side
+    fc_geoms = [[(st[2], -(-st[1] // binarize.PACK_WIDTH))
+                 for st in plan.mega if st[0] == "fc"] for plan in plans]
+    lf = max(len(g) for g in fc_geoms)
+    n_offs, row = [], [0] * lf
+    for g in fc_geoms:
+        offs = []
+        for li, (n, _kw) in enumerate(g):
+            offs.append(row[li])
+            row[li] += n
+        n_offs.append(tuple(offs))
+    n_tot = max(row)
+    kw_tot = max(kw for g in fc_geoms for _n, kw in g)
+    fw = jnp.zeros((lf, n_tot, kw_tot), jnp.uint32)
+    for img, g, offs in zip(images, fc_geoms, n_offs):
+        for li, ((n, kw), o) in enumerate(zip(g, offs)):
+            fw = fw.at[li, o:o + n, :kw].set(img["fw"][li, :n, :kw])
+
+    mspecs = []
+    for plan, fo, offs in zip(plans, f_offs, n_offs):
+        fi, st_out = 0, []
+        for st in plan.mega:
+            if st[0] == "io":
+                st_out.append(st)
+            elif st[0] == "conv":
+                st_out.append(st + (fo,))
+            else:
+                st_out.append(st + (offs[fi],))
+                fi += 1
+        mspecs.append(tuple(st_out))
+
+    cplan = CompositePlan(names=names, programs=progs, plans=plans,
+                          spec=tuple(mspecs))
+    return cplan, {"cw": cw, "ct": ct, "cf": cf, "fw": fw}
 
 
 def forward_infer(folded, program: isa.Program, images: jax.Array,

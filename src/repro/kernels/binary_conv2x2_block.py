@@ -64,6 +64,26 @@ def conv_block_body(a, w, tau, flip, *, k4: int, h: int, wd: int,
     return pack_bit_lanes(bits)
 
 
+def conv_block_body_grouped(a, w, tau, flip, *, k4: int, h: int, wd: int,
+                            pool: bool) -> jax.Array:
+    """:func:`conv_block_body` vmapped over a leading sub-array axis.
+
+    The megakernel's composite dispatch stacks members with identical
+    IO+conv chains on a group axis G — G concurrent sub-arrays, each with
+    its own weights/thresholds, evaluated in one fused batched
+    contraction (the chip's side-by-side S-mode recombination; on TPU
+    the G axis fills the lanes a single narrow sub-array would leave
+    idle).  Bit-exact per group row vs the solo body by construction.
+
+    a:    (G, bb, H, W, Cw) uint32 packed input maps.
+    w:    (G, bf, 4, Cw)    uint32 packed weight taps, (dy, dx) row-major.
+    tau/flip: (G, bf) int32 comparator thresholds / directions.
+    Returns (G, bb, Ho, Wo, bf // 32) uint32 packed output words.
+    """
+    body = functools.partial(conv_block_body, k4=k4, h=h, wd=wd, pool=pool)
+    return jax.vmap(body)(a, w, tau, flip)
+
+
 def _conv_block_kernel(a_ref, w_ref, tau_ref, flip_ref, out_ref, *,
                        k4: int, h: int, w: int, pool: bool):
     """One (f-tile, frame-tile) grid step.

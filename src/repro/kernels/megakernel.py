@@ -1,4 +1,4 @@
-"""Pallas TPU megakernel: the whole network resident in VMEM, per frame tile.
+"""Pallas TPU megakernel: whole networks resident in VMEM, per frame tile.
 
 BinarEye "stores full network models and feature maps and hence requires no
 off-chip bandwidth": weights sit in the 259 kB SRAM, feature maps ping-pong
@@ -16,26 +16,36 @@ model in one ``pallas_call``:
   of the chip's 259 kB weight SRAM.
 * **Feature maps stay in VMEM.**  Inter-layer maps are kernel-resident
   values — Mosaic allocates them out of VMEM, the analogue of the chip's
-  west/east feature SRAMs — and never touch HBM.  (An explicit ping-pong
-  scratch buffer would model the SRAM pair even more literally, but it
-  adds a write+read bounce per layer that is real extra VMEM traffic on
-  every backend, so the maps flow as values instead.)
+  west/east feature SRAMs — and never touch HBM.
 * **Double-buffered frame streaming.**  The grid iterates frame tiles;
   raw frames stay in HBM (``memory_space=ANY``) and are streamed tile by
   tile with manual ``make_async_copy``/wait into a 2-slot VMEM buffer, so
   tile N+1 DMAs in while tile N computes; logits DMA out the same way.
   The IO thermometer encode runs in-kernel on the raw integer pixels, so
   the only HBM traffic of the whole network is frames in, logits out.
+* **f-tiled conv.**  Each conv layer's F output neurons are computed in
+  chunks of ``ft`` (``ft=0`` = all F in one chunk).  Tiling is a pure
+  schedule choice — packed output words concatenate to the identical
+  result — but it bounds the dominant live value, the int32 accumulator
+  ``bb*(H-1)*(W-1)*ft*4B``, which is the S=1 VMEM-headroom knob.  The
+  best ``bb``/``ft`` per (program, backend, batch) comes from the
+  persistent autotune cache (``kernels.autotune``).
+* **Multi-program composite dispatch (sub-array sharing).**  When several
+  resident programs' S-modes tile the 256-channel array exactly (4xS4,
+  2xS2, 2xS4+1xS2, ...), their weight images pack side-by-side on the F
+  axis into ONE composite SRAM image and their frame streams run through
+  ONE ``pallas_call`` per batch — the chip's concurrent sub-array
+  recombination, not time-interleaved whole-array dispatches.  Each
+  member computes on its own disjoint F range (and its own feature maps);
+  members with identical IO+conv chains are additionally *grouped*: their
+  maps stack on a leading sub-array axis and one fused conv evaluates all
+  of them — the lanes the solo S=4 dispatch leaves idle now carry the
+  other sub-arrays.
 
-The per-layer arithmetic is ``binary_conv2x2_block.conv_block_body`` — the
-exact function the staged path runs — so the two paths are bit-exact by
-construction (and tested, ``tests/test_megakernel.py``).
-
-VMEM budget: unlike the staged kernel, a conv layer here computes all F
-neurons in one step, so the dominant live value is the int32 accumulator
-``bb * (H-1) * (W-1) * F * 4B`` (~7.9 MB for cifar9-S1 at bb=8).  On a
-real TPU shrink ``bb`` first (bb=2 keeps the worst case under 2 MB); the
-weight image + streaming buffers are small (<1 MB total).
+The per-layer arithmetic is ``binary_conv2x2_block.conv_block_body`` (and
+its grouped twin) — the staged path's exact function — so all execution
+modes are bit-exact by construction (tested, ``tests/test_megakernel.py``
+and ``tests/test_composite.py``).
 """
 
 from __future__ import annotations
@@ -49,12 +59,32 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.binarize import (PACK_WIDTH, pack_bit_lanes,
                                  thermometer_pack, xnor_dot_popcount)
-from repro.kernels.binary_conv2x2_block import conv_block_body
+from repro.kernels.binary_conv2x2_block import (conv_block_body,
+                                                conv_block_body_grouped)
 
-# Static stage spec entries (hashable; built by interpreter.InferencePlan):
+# Member stage spec entries (hashable; built by interpreter):
 #   ("io",   h, w, cin, bits, channels)
-#   ("conv", h, w, c, f, pool)            h/w = input map size
-#   ("fc",   k, n, final, pack_out)
+#   ("conv", h, w, c, f, pool, f_off)      h/w = input map size; f_off =
+#                                          the member's row offset on the
+#                                          composite image's F axis
+#   ("fc",   k, n, final, pack_out, n_off) n_off = row offset on the
+#                                          composite FC image's N axis
+# A composite spec is a tuple of member specs; the solo megakernel is the
+# one-member special case (offsets 0), so both paths share one kernel.
+
+
+def _solo_member_spec(spec):
+    """Lift ``InferencePlan.mega``'s offset-less stage tuples to a
+    one-member composite spec (all offsets 0)."""
+    return (tuple(st if st[0] == "io" else st + (0,) for st in spec),)
+
+
+def _f_tiles(f: int, ft: int):
+    """Static (offset, length) chunks of the F axis; ft=0 -> one chunk."""
+    if not ft or ft >= f:
+        return ((0, f),)
+    ft = max(PACK_WIDTH, ft // PACK_WIDTH * PACK_WIDTH)
+    return tuple((f0, min(ft, f - f0)) for f0 in range(0, f, ft))
 
 
 def _fc_body(x, wfc, k: int):
@@ -62,142 +92,274 @@ def _fc_body(x, wfc, k: int):
     return xnor_dot_popcount(x[:, None, :], wfc[None, :, :], k)
 
 
-def _run_stages(frames, cw, ct, cf, fw, spec):
-    """The whole-network pipeline on one VMEM-resident frame tile.
+def _run_fc_tail(fm, fw, fc_stages):
+    """The FC chain of one member on a VMEM-resident map/row value."""
+    x = fm.reshape(fm.shape[0], -1) if fm.ndim == 4 else fm
+    for fi, st in enumerate(fc_stages):
+        _, k, n, final, _pack_out, n_off = st
+        kw = -(-k // PACK_WIDTH)
+        s = _fc_body(x, fw[fi, n_off:n_off + n, :kw], k)
+        if final:
+            return s
+        if n % PACK_WIDTH == 0:
+            x = pack_bit_lanes((s < 0).astype(jnp.uint32))
+        else:                  # odd-width hidden FC: sign, pad, repack
+            bits_ = (s < 0).astype(jnp.uint32)
+            bits_ = jnp.pad(bits_, ((0, 0), (0, (-n) % PACK_WIDTH)))
+            x = pack_bit_lanes(bits_)
+    raise AssertionError("member spec must end with a final FC stage")
 
-    ``frames``: (bb, H, W, Cin) int32 raw pixels (already DMA'd to VMEM);
-    ``cw``/``ct``/``cf``: the conv SRAM image; ``fw``: the padded FC
-    image.  The feature map flows layer to layer as a VMEM-resident
-    value.  Returns (bb, classes) int32 logits.
+
+def _split_stages(stages):
+    """(io+conv prefix, fc tail) of a member spec."""
+    n = sum(1 for st in stages if st[0] != "fc")
+    return stages[:n], stages[n:]
+
+
+def _run_member(frames, cw, ct, cf, fw, stages, ft):
+    """One member's whole-network pipeline on one VMEM frame tile.
+
+    ``frames``: (bb, H, W, Cin) int32 raw pixels; ``cw``/``ct``/``cf``/
+    ``fw``: the (composite) SRAM image — the member reads its own F rows
+    via the spec's static offsets.  Returns (bb, classes) int32 logits.
     """
-    ci = fi = 0
-    fm = None                      # packed spatial map, (bb, h, w, Cw)
-    x = None                       # packed FC row words once spatial ends
-    logits = None
-    for st in spec:
+    head, tail = _split_stages(stages)
+    ci = 0
+    fm = None
+    for st in head:
         if st[0] == "io":
             _, h, w, cin, bits, channels = st
-            # the staged path's exact IO arithmetic, run in-kernel
             fm = thermometer_pack(frames, bits, cin, channels)
-        elif st[0] == "conv":
-            _, h, w, c, f, pool = st
-            fm = conv_block_body(fm, cw[ci], ct[ci], cf[ci],
-                                 k4=4 * c, h=h, wd=w, pool=pool)
-            ci += 1
         else:
-            _, k, n, final, pack_out = st
-            kw = -(-k // PACK_WIDTH)
-            if x is None:          # flatten the last spatial map into rows
-                # (bb, h, w, Cw) words flatten directly into packed FC
-                # rows: F % 32 == 0 makes word order the channel order.
-                x = fm.reshape(fm.shape[0], -1)
-            s = _fc_body(x, fw[fi, :n, :kw], k)
-            if final:
-                logits = s
-            elif n % PACK_WIDTH == 0:
-                x = pack_bit_lanes((s < 0).astype(jnp.uint32))
-            else:                  # odd-width hidden FC: sign, pad, repack
-                bits_ = (s < 0).astype(jnp.uint32)
-                padn = (-n) % PACK_WIDTH
-                bits_ = jnp.pad(bits_, ((0, 0), (0, padn)))
-                x = pack_bit_lanes(bits_)
-            fi += 1
+            _, h, w, c, f, pool, f_off = st
+            cwp = c // PACK_WIDTH
+            chunks = [
+                conv_block_body(fm, cw[ci, f_off + f0:f_off + f0 + fl, :, :cwp],
+                                ct[ci, f_off + f0:f_off + f0 + fl],
+                                cf[ci, f_off + f0:f_off + f0 + fl],
+                                k4=4 * c, h=h, wd=w, pool=pool)
+                for f0, fl in _f_tiles(f, ft)]
+            fm = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, -1)
+            ci += 1
+    return _run_fc_tail(fm, fw, tail)
+
+
+def _run_group(tiles, cw, ct, cf, fw, specs, ft):
+    """Members with identical IO+conv chains, run as stacked sub-arrays.
+
+    Their frame tiles stack on a leading sub-array axis and every conv
+    evaluates all of them in one fused contraction — side-by-side F-axis
+    occupancy instead of one idle-laned sub-array at a time.  FC tails
+    (which may differ per member) run per member.  Returns the members'
+    logits in ``specs`` order.
+    """
+    head, _ = _split_stages(specs[0])
+    ci = 0
+    fmg = None
+    for idx, st in enumerate(head):
+        if st[0] == "io":
+            _, h, w, cin, bits, channels = st
+            fmg = thermometer_pack(jnp.stack(tiles), bits, cin, channels)
+        else:
+            _, h, w, c, f, pool, _ = st
+            g = len(specs)
+            cwp = c // PACK_WIDTH
+            offs = [sp[idx][6] for sp in specs]
+            # adjacent members (the common case: pack_programs assigns F
+            # offsets in member order) form one contiguous slab — slice
+            # + reshape instead of gathering G strided slices per grid
+            # step / f-tile
+            contiguous = (ft == 0 or ft >= f) and all(
+                o == offs[0] + gi * f for gi, o in enumerate(offs))
+
+            def rows(img, f0, fl, width=None):
+                if contiguous:
+                    slab = (img[ci, offs[0]:offs[0] + g * f, :, :width]
+                            if width else img[ci, offs[0]:offs[0] + g * f])
+                    return slab.reshape((g, f) + slab.shape[1:])
+                if width:
+                    return jnp.stack([img[ci, o + f0:o + f0 + fl, :, :width]
+                                      for o in offs])
+                return jnp.stack([img[ci, o + f0:o + f0 + fl] for o in offs])
+
+            chunks = []
+            for f0, fl in _f_tiles(f, ft):
+                chunks.append(conv_block_body_grouped(
+                    fmg, rows(cw, f0, fl, cwp), rows(ct, f0, fl),
+                    rows(cf, f0, fl), k4=4 * c, h=h, wd=w, pool=pool))
+            fmg = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, -1)
+            ci += 1
+    return [_run_fc_tail(fmg[g], fw, _split_stages(sp)[1])
+            for g, sp in enumerate(specs)]
+
+
+def _member_groups(spec):
+    """Partition member indices into sub-array groups: members whose
+    IO+conv chains are shape-identical (F offsets stripped) stack into one
+    grouped conv; singletons run the plain member body."""
+    classes = {}
+    for m, stages in enumerate(spec):
+        head, _ = _split_stages(stages)
+        key = tuple(st[:6] for st in head)     # strips the conv f_off
+        classes.setdefault(key, []).append(m)
+    return tuple(tuple(v) for v in classes.values())
+
+
+def _run_members(tiles, cw, ct, cf, fw, spec, ft):
+    """All members of a composite on their VMEM frame tiles -> logits."""
+    logits = [None] * len(spec)
+    for group in _member_groups(spec):
+        if len(group) == 1:
+            m, = group
+            logits[m] = _run_member(tiles[m], cw, ct, cf, fw, spec[m], ft)
+        else:
+            outs = _run_group([tiles[m] for m in group], cw, ct, cf, fw,
+                              [spec[m] for m in group], ft)
+            for m, lg in zip(group, outs):
+                logits[m] = lg
     return logits
 
 
-def _mega_kernel(frames_hbm, cw_ref, ct_ref, cf_ref, fw_ref, out_hbm,
-                 fbuf, obuf, in_sem, out_sem, *,
-                 spec, bb: int, n_tiles: int):
-    """One frame-tile grid step with 2-slot input/output DMA pipelining."""
+def _composite_kernel(*refs, spec, bb: int, n_tiles: int, ft: int):
+    """One frame-tile grid step: per-member 2-slot input/output DMA
+    pipelining around the fused multi-member compute."""
+    nm = len(spec)
+    frames_hbm = refs[:nm]
+    cw_ref, ct_ref, cf_ref, fw_ref = refs[nm:nm + 4]
+    out_hbm = refs[nm + 4:nm + 4 + nm]
+    sc = refs[nm + 4 + nm:]
+    fbuf, obuf = sc[:nm], sc[nm:2 * nm]
+    in_sem, out_sem = sc[2 * nm:3 * nm], sc[3 * nm:4 * nm]
+
     i = pl.program_id(0)
     slot = jax.lax.rem(i, 2)
     nxt = jax.lax.rem(i + 1, 2)
 
-    def in_copy(s, t):
+    def in_copy(p, s, t):
         return pltpu.make_async_copy(
-            frames_hbm.at[pl.ds(t * bb, bb)], fbuf.at[s], in_sem.at[s])
+            frames_hbm[p].at[pl.ds(t * bb, bb)], fbuf[p].at[s],
+            in_sem[p].at[s])
 
-    def out_copy(s, t):
+    def out_copy(p, s, t):
         return pltpu.make_async_copy(
-            obuf.at[s], out_hbm.at[pl.ds(t * bb, bb)], out_sem.at[s])
+            obuf[p].at[s], out_hbm[p].at[pl.ds(t * bb, bb)], out_sem[p].at[s])
 
-    @pl.when(i == 0)                     # warm-up: tile 0 streams in
+    @pl.when(i == 0)                     # warm-up: every member's tile 0
     def _():
-        in_copy(0, 0).start()
+        for p in range(nm):
+            in_copy(p, 0, 0).start()
 
     @pl.when(i + 1 < n_tiles)            # tile N+1 streams while N computes
     def _():
-        in_copy(nxt, jnp.minimum(i + 1, n_tiles - 1)).start()
+        for p in range(nm):
+            in_copy(p, nxt, jnp.minimum(i + 1, n_tiles - 1)).start()
 
-    in_copy(slot, i).wait()
-    logits = _run_stages(fbuf[slot], cw_ref[...], ct_ref[...], cf_ref[...],
-                         fw_ref[...], spec)
+    for p in range(nm):
+        in_copy(p, slot, i).wait()
+    logits = _run_members([fbuf[p][slot] for p in range(nm)],
+                          cw_ref[...], ct_ref[...], cf_ref[...], fw_ref[...],
+                          spec, ft)
 
     if n_tiles > 2:                      # drain the DMA issued 2 tiles ago
         @pl.when(i >= 2)                 # before reusing its slot
         def _():
-            out_copy(slot, jnp.maximum(i - 2, 0)).wait()
-    obuf[slot] = logits
-    out_copy(slot, i).start()
+            for p in range(nm):
+                out_copy(p, slot, jnp.maximum(i - 2, 0)).wait()
+    for p in range(nm):
+        obuf[p][slot] = logits[p]
+        out_copy(p, slot, i).start()
 
     @pl.when(i == n_tiles - 1)           # final tile: drain everything
     def _():
-        out_copy(slot, i).wait()
+        for p in range(nm):
+            out_copy(p, slot, i).wait()
     if n_tiles > 1:
         @pl.when(i == n_tiles - 1)
         def _():
-            out_copy(1 - slot, i - 1).wait()
+            for p in range(nm):
+                out_copy(p, 1 - slot, i - 1).wait()
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "bb", "interpret"))
-def megakernel_forward(image, frames: jax.Array, *, spec,
-                       bb: int = 8, interpret: bool = False) -> jax.Array:
-    """Whole-network packed inference in a single resident ``pallas_call``.
+@functools.partial(jax.jit, static_argnames=("spec", "bb", "ft", "interpret"))
+def composite_forward(image, frames, *, spec, bb: int = 8, ft: int = 0,
+                      interpret: bool = False):
+    """Multi-program packed inference in a single resident ``pallas_call``.
 
-    image:  the weight-image artifact (``interpreter.fold_params(...,
-            image=True)``): ``cw`` (n_conv, F, 4, Cw) uint32 conv words,
-            ``ct``/``cf`` (n_conv, F) int32 thresholds/directions,
-            ``fw`` (n_fc, Nmax, Kwmax) uint32 padded FC words.
-    frames: (B, H, W, Cin) integer images.
-    spec:   static stage tuple from ``InferencePlan.mega``.
+    image:  the composite weight image (``interpreter.pack_programs``) —
+            or a member's own image for the one-member (solo) case:
+            ``cw`` (Lc, F_total, 4, Cw) uint32 conv words, ``ct``/``cf``
+            (Lc, F_total) int32 thresholds/directions, ``fw``
+            (Lf, N_total, Kw) uint32 padded FC words.
+    frames: tuple of (B_m, H_m, W_m, Cin_m) integer images, one per
+            member; ragged B_m are padded to the longest member's batch
+            (padding frames compute garbage that is trimmed on return).
+    spec:   static tuple of member stage specs (see module header).
     bb:     frame-tile size (the double-buffered streaming granule).
-    Returns (B, classes) int32 logits.
+    ft:     conv f-tile size; 0 = all F per chunk.
+    Returns a tuple of (B_m, classes_m) int32 logits, one per member.
     """
-    io = spec[0]
-    assert io[0] == "io", spec
-    h, w, cin = io[1], io[2], io[3]
-    final = spec[-1]
-    assert final[0] == "fc" and final[3], spec
-    ncls = final[2]
+    assert len(frames) == len(spec), (len(frames), len(spec))
+    bs = [f.shape[0] for f in frames]
+    bmax = max(bs)
+    bb = max(1, min(bb, bmax))
+    bpad = -(-bmax // bb) * bb
+    n_tiles = bpad // bb
 
-    b = frames.shape[0]
-    bb = min(bb, b)
-    bp = (-b) % bb
-    frames = frames.astype(jnp.int32)
-    if bp:                               # ragged final tile: pad, trim below
-        frames = jnp.pad(frames, ((0, bp), (0, 0), (0, 0), (0, 0)))
-    n_tiles = frames.shape[0] // bb
+    padded = []
+    for f in frames:
+        f = f.astype(jnp.int32)
+        if f.shape[0] != bpad:
+            f = jnp.pad(f, ((0, bpad - f.shape[0]),) + ((0, 0),) * 3)
+        padded.append(f)
+
+    ncls = []
+    geom = []
+    for stages in spec:
+        io = stages[0]
+        assert io[0] == "io", stages
+        geom.append((io[1], io[2], io[3]))
+        final = stages[-1]
+        assert final[0] == "fc" and final[3], stages
+        ncls.append(final[2])
 
     def resident(arr):                   # whole array, fetched once
         nd = arr.ndim
         return pl.BlockSpec(arr.shape, lambda i, _n=nd: (0,) * _n)
 
-    out = pl.pallas_call(
-        functools.partial(_mega_kernel, spec=spec, bb=bb, n_tiles=n_tiles),
+    nm = len(spec)
+    outs = pl.pallas_call(
+        functools.partial(_composite_kernel, spec=spec, bb=bb,
+                          n_tiles=n_tiles, ft=ft),
         grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),      # frames stay in HBM
-            resident(image["cw"]), resident(image["ct"]),
-            resident(image["cf"]), resident(image["fw"]),
-        ],
-        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
-        out_shape=jax.ShapeDtypeStruct((frames.shape[0], ncls), jnp.int32),
-        scratch_shapes=[
-            pltpu.VMEM((2, bb, h, w, cin), jnp.int32),     # frame tiles
-            pltpu.VMEM((2, bb, ncls), jnp.int32),          # logit tiles
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
+        in_specs=(
+            [pl.BlockSpec(memory_space=pltpu.ANY)] * nm      # frames: HBM
+            + [resident(image["cw"]), resident(image["ct"]),
+               resident(image["cf"]), resident(image["fw"])]),
+        out_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * nm,
+        out_shape=[jax.ShapeDtypeStruct((bpad, n), jnp.int32) for n in ncls],
+        scratch_shapes=(
+            [pltpu.VMEM((2, bb, h, w, c), jnp.int32) for h, w, c in geom]
+            + [pltpu.VMEM((2, bb, n), jnp.int32) for n in ncls]
+            + [pltpu.SemaphoreType.DMA((2,)) for _ in range(2 * nm)]),
         interpret=interpret,
-    )(frames, image["cw"], image["ct"], image["cf"], image["fw"])
-    return out[:b]
+    )(*padded, image["cw"], image["ct"], image["cf"], image["fw"])
+    outs = outs if isinstance(outs, (list, tuple)) else [outs]
+    return tuple(o[:b] for o, b in zip(outs, bs))
+
+
+def megakernel_forward(image, frames: jax.Array, *, spec,
+                       bb: int = 8, ft: int = 0,
+                       interpret: bool = False) -> jax.Array:
+    """Whole-network packed inference for ONE program: the one-member
+    composite (see :func:`composite_forward`).
+
+    image:  the weight-image artifact (``interpreter.fold_params(...,
+            image=True)``).
+    frames: (B, H, W, Cin) integer images.
+    spec:   static stage tuple from ``InferencePlan.mega``.
+    bb/ft:  frame-tile / conv f-tile sizes (tuned values come from the
+            ``kernels.autotune`` cache via the interpreter layer).
+    Returns (B, classes) int32 logits.
+    """
+    return composite_forward(image, (frames,), spec=_solo_member_spec(spec),
+                             bb=bb, ft=ft, interpret=interpret)[0]

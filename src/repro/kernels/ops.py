@@ -62,6 +62,7 @@ def binary_conv2x2_block(a_words: jax.Array, w_words: jax.Array,
 
 
 def megakernel_forward(image, frames: jax.Array, *, spec, bb: int = 8,
+                       ft: int = 0,
                        interpret: bool | None = None) -> jax.Array:
     """Whole-network VMEM-resident inference: raw frames -> int32 logits.
 
@@ -69,11 +70,28 @@ def megakernel_forward(image, frames: jax.Array, *, spec, bb: int = 8,
     from ``InferencePlan.mega``) with the full weight image resident in
     VMEM, feature maps in VMEM scratch and frame tiles of ``bb``
     double-buffered through the grid — no HBM traffic between layers.
+    ``ft`` f-tiles each conv layer's F axis (0 = all F per chunk).
     """
     if interpret is None:
         interpret = default_interpret()
-    return _mk.megakernel_forward(image, frames, spec=spec, bb=bb,
+    return _mk.megakernel_forward(image, frames, spec=spec, bb=bb, ft=ft,
                                   interpret=interpret)
+
+
+def composite_forward(image, frames, *, spec, bb: int = 8, ft: int = 0,
+                      interpret: bool | None = None):
+    """Shared-array multi-program inference: one ``pallas_call`` runs
+    every member of a composite (programs whose S-modes tile the array
+    exactly) on its own frame stream against the composite weight image.
+
+    ``frames`` is a tuple of per-member (B, H, W, Cin) batches; returns a
+    tuple of per-member (B, classes) int32 logits.  See
+    ``interpreter.pack_programs`` for building ``image``/``spec``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _mk.composite_forward(image, tuple(frames), spec=spec, bb=bb,
+                                 ft=ft, interpret=interpret)
 
 
 def binary_linear(x: jax.Array, w_signs: jax.Array, *,

@@ -73,6 +73,20 @@ def main(argv=None):
     ap.add_argument("--prefetch", action="store_true",
                     help="double-buffer submission: stage batch N+1 while "
                          "batch N runs, block only on fetch")
+    ap.add_argument("--prefetch-depth", type=int, default=None,
+                    help="pipeline submission to depth k with async host "
+                         "result fetch (implies --prefetch; default 1 "
+                         "when --prefetch is set)")
+    ap.add_argument("--shared", action="store_true",
+                    help="shared-array dispatch: programs whose S-modes "
+                         "tile the 256-channel array exactly run as ONE "
+                         "composite pallas_call per batch (true sub-array "
+                         "sharing instead of interleaved dispatches)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure-and-cache the best kernel tile sizes "
+                         "for each resident program on this backend "
+                         "before serving (persisted in the autotune "
+                         "cache, see kernels/autotune.py)")
     ap.add_argument("--no-warm-bn", action="store_true",
                     help="skip the one-batch BN warm (faster, cruder "
                          "thresholds)")
@@ -90,14 +104,54 @@ def main(argv=None):
     artifacts = {n: build_artifact(p, args.seed + i, not args.no_warm_bn)
                  for i, (n, p) in enumerate(programs.items())}
 
+    if args.autotune:
+        from repro.kernels import autotune
+        for n, p in programs.items():
+            plan = interpreter.compile_plan(p)
+            frames = jax.numpy.asarray(frame_stream(p, args.batch, args.seed))
+            if args.megakernel:
+                image = interpreter.ensure_image(artifacts[n], p)
+                entry = autotune.tune_mega(plan, image, frames)
+                print(f"autotuned {n}: megakernel bb={entry['bb']} "
+                      f"ft={entry['ft']} ({entry['us']:.0f} us)")
+            else:
+                packed = interpreter.ensure_packed(artifacts[n])
+                entry = autotune.tune_staged_conv(plan, packed, frames)
+                print(f"autotuned {n}: staged conv bf={entry['bf']} "
+                      f"bb={entry['bb']} ({entry['us']:.0f} us)")
+        if args.shared:
+            # the shared path's hot kernel is the composite, keyed under
+            # its own fingerprint — tune each group it will form
+            from repro.serving.scheduler import plan_shared_groups
+            for members in plan_shared_groups(programs):
+                cplan, cimage = interpreter.pack_programs(
+                    {m: programs[m] for m in members},
+                    {m: artifacts[m] for m in members})
+                frames = tuple(jax.numpy.asarray(
+                    frame_stream(programs[m], args.batch, args.seed))
+                    for m in members)
+                entry = autotune.tune_composite(cplan, cimage, frames)
+                print(f"autotuned {'+'.join(members)}: composite "
+                      f"bb={entry['bb']} ft={entry['ft']} "
+                      f"({entry['us']:.0f} us)")
+
     mesh = sharding.serve_mesh() if args.shard else None
     ndev = mesh.devices.size if mesh is not None else 1
+    prefetch = (args.prefetch_depth if args.prefetch_depth is not None
+                else int(args.prefetch))
     server = ChipServer(programs, artifacts, batch=args.batch, mesh=mesh,
                         donate_frames=args.donate,
-                        megakernel=args.megakernel, prefetch=args.prefetch)
+                        megakernel=args.megakernel, prefetch=prefetch,
+                        shared=args.shared)
     print(f"resident programs: {names}  (batch={args.batch}, "
           f"devices={ndev}, S-modes={[programs[n].s for n in names]}, "
-          f"megakernel={args.megakernel}, prefetch={args.prefetch})")
+          f"megakernel={args.megakernel}, prefetch={prefetch}, "
+          f"shared={args.shared})")
+    if args.shared:
+        groups = server.shared_groups
+        print("shared-array groups: "
+              + (", ".join("+".join(g) for g in groups)
+                 if groups else "none (S-modes do not tile the array)"))
 
     # interleaved synthetic streams: round-robin submission across programs
     per = {n: frame_stream(programs[n], -(-args.requests // len(names)),
@@ -125,6 +179,9 @@ def main(argv=None):
               f"slots, {rep.i2l_energy_per_inference*1e6:.2f} uJ/frame, "
               f"S={programs[n].s}")
     print(f"host-sim throughput : {stats.host_frames_per_s:,.0f} frames/s")
+    print(f"array utilization   : {stats.array_utilization:.2f} mean "
+          f"occupied fraction over {stats.dispatches} dispatches "
+          f"({stats.shared_dispatches} shared)")
     print(f"chip-model bill     : {stats.chip.uj_per_frame:.2f} uJ/frame, "
           f"{stats.chip.frames_per_s:,.0f} frames/s at Emin, "
           f"{stats.chip.power_w*1e3:.2f} mW avg "

@@ -30,18 +30,33 @@ Two further deployment knobs mirror the chip's always-on pipelining:
   resident Pallas kernel (``InferencePlan.forward_mega``): the program's
   full weight image stays VMEM-resident, feature maps never leave VMEM,
   and frame tiles double-buffer through the kernel grid.
-* ``prefetch=True`` double-buffers *submission*: while batch N runs on
-  the device, batch N+1 is already pulled from the queue, padded and
-  dispatched; the host blocks only when fetching N's results — the TPU
-  analogue of the chip loading the next image through the IO pads while
-  the array convolves the current one.  Dispatch order (and hence the
-  scheduler's fairness contract) is unchanged: batches are pulled from
-  the ``FrameQueue`` in exactly the same order as the synchronous path.
+* ``prefetch=k`` pipelines *submission* to depth k (``True`` = 1): while
+  batch N runs on the device, batches N+1..N+k are already pulled from
+  the queue, padded and dispatched, and finished batches' results are
+  fetched to host memory by a background thread — the host blocks only
+  when a result is consumed before its fetch lands.  The TPU analogue of
+  the chip loading the next image through the IO pads while the array
+  convolves the current one.  Dispatch order (and hence the scheduler's
+  fairness contract) is unchanged: batches are pulled from the
+  ``FrameQueue`` in exactly the same order as the synchronous path.
+* ``shared=True`` enables **true sub-array sharing**: resident programs
+  whose S-modes tile the 256-channel array exactly (4xS4, 2xS2,
+  2xS4+1xS2, ...) are compiled into a :class:`~repro.core.chip.
+  interpreter.CompositePlan` at admission; when two or more of a group's
+  FIFO lanes are backlogged, ONE composite dispatch serves all of them
+  concurrently — the chip's recombined sub-arrays, not time-interleaved
+  whole-array dispatches.  Each member's lane pads (and is billed)
+  independently, per sub-array; a group member whose lane is idle burns
+  its sub-array's slots like any padding (the always-on array never
+  idles).  Results are bit-exact vs solo dispatch, fairness is
+  preserved (serving a backlogged lane early never starves another),
+  and ``stats().array_utilization`` reports the occupancy win.
 """
 
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
 import time
 from typing import Any, Dict, Iterable, List, Mapping, Optional, Tuple
@@ -74,10 +89,17 @@ class FrameResult:
 class FrameQueue:
     """Per-program FIFO lanes + round-robin dispatch across non-empty lanes.
 
-    The fairness contract (property-tested in tests/test_chip_serve.py):
-    a lane is never dispatched twice while another lane has been waiting
-    non-empty the whole time — the pointer advances past each served lane
-    and only skips lanes that are empty at their turn.
+    The solo fairness contract (:meth:`next_batch`, property-tested in
+    tests/test_chip_serve.py): a lane is never dispatched twice while
+    another lane has been waiting non-empty the whole time — the pointer
+    advances past each served lane and only skips lanes that are empty at
+    their turn.  :meth:`next_batch_shared` deliberately relaxes the
+    "never twice" half for lanes *inside a shared-array group* (a
+    composite dispatch serves every backlogged group member each time the
+    pointer hits any of them), but keeps the no-starvation bound every
+    consumer actually relies on: any lane non-empty before a dispatch is
+    itself served within the next ``n_lanes`` dispatches, and no lane is
+    ever served *later* than the solo schedule would have served it.
     """
 
     def __init__(self, programs: Iterable[str]):
@@ -121,6 +143,65 @@ class FrameQueue:
                 return name, take
         return None
 
+    def next_batch_shared(self, capacity: int,
+                          groups: Mapping[str, Tuple[str, ...]]
+                          ) -> Optional[Dict[str, List[FrameRequest]]]:
+        """Round-robin like :meth:`next_batch`, but when the selected lane
+        belongs to a shared-array group with >= 2 backlogged members, pull
+        up to ``capacity`` from *every* backlogged member — one composite
+        dispatch serves them all concurrently.  Lanes served early keep
+        their round-robin position (they are simply empty — or shorter —
+        when the pointer reaches them), so the no-starvation contract is
+        untouched: a backlogged lane is only ever served *sooner*.
+        Returns ``{name: requests}`` (single-entry for a solo dispatch),
+        ``None`` once fully drained.
+        """
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        n = len(self._order)
+        for i in range(n):
+            name = self._order[(self._rr + i) % n]
+            if not self._lanes[name]:
+                continue
+            self._rr = (self._rr + i + 1) % n
+            members = groups.get(name, (name,))
+            backlogged = [m for m in members if self._lanes[m]]
+            take_from = backlogged if len(backlogged) >= 2 else [name]
+            out = {}
+            for m in take_from:
+                lane = self._lanes[m]
+                out[m] = [lane.popleft()
+                          for _ in range(min(capacity, len(lane)))]
+            return out
+        return None
+
+
+def plan_shared_groups(programs: Mapping[str, isa.Program]
+                       ) -> Tuple[Tuple[str, ...], ...]:
+    """Partition resident programs into shared-array groups.
+
+    First-fit-decreasing bin packing on sub-array width (256/S channels)
+    into 256-channel bins; only bins that end *exactly* full with >= 2
+    members become composite groups (the chip can only recombine
+    sub-arrays that tile the array), everything else dispatches solo.
+    Deterministic given admission order, so every server replica forms
+    the same groups.
+    """
+    # stable sort: widest sub-arrays (smallest S) first, admission order
+    # preserved within a width class
+    items = sorted(programs.items(), key=lambda kv: kv[1].s)
+    bins: List[Tuple[int, List[str]]] = []    # (free channels, members)
+    for name, prog in items:
+        width = isa.ARRAY_CHANNELS // prog.s
+        for i, (free, members) in enumerate(bins):
+            if width <= free:
+                bins[i] = (free - width, members + [name])
+                break
+        else:
+            bins.append((isa.ARRAY_CHANNELS - width, [name]))
+    return tuple(tuple(members) for free, members in bins
+                 if free == 0 and len(members) >= 2)
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeStats:
@@ -131,6 +212,9 @@ class ServeStats:
     host_wall_s: float                # wall time inside dispatches
     host_frames_per_s: float
     chip: energy.ServeReport          # µJ/frame, frames/s, power analogue
+    array_utilization: float = 0.0    # mean sum(1/S) of live sub-arrays
+                                      # per dispatch (1.0 = full array)
+    shared_dispatches: int = 0        # dispatches serving >= 2 programs
 
     @property
     def total_served(self) -> int:
@@ -144,20 +228,25 @@ class ChipServer:
     ``artifacts`` maps the same names to their packed deployment artifacts
     (``fold_params(..., packed=True)`` — float-folded artifacts are packed
     on admission).  ``batch`` is the static dispatch size; with a ``mesh``
-    it must divide over the mesh's device count.
+    it must divide over the mesh's device count.  ``prefetch`` takes a
+    pipeline depth (``True`` = 1); ``shared=True`` forms shared-array
+    composite groups (see the module docstring).
     """
 
     def __init__(self, programs: Mapping[str, isa.Program],
                  artifacts: Mapping[str, Any], *, batch: int = 8,
                  mesh=None, donate_frames: bool = False,
                  interpret: Optional[bool] = None,
-                 megakernel: bool = False, prefetch: bool = False,
+                 megakernel: bool = False, prefetch: bool | int = False,
+                 shared: bool = False,
                  f_hz: float = energy.F_EMIN):
         if set(programs) != set(artifacts):
             raise ValueError(
                 f"programs {sorted(programs)} != artifacts {sorted(artifacts)}")
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
+        if int(prefetch) < 0:
+            raise ValueError(f"prefetch depth must be >= 0, got {prefetch}")
         ndev = mesh.devices.size if mesh is not None else 1
         if batch % ndev:
             raise ValueError(
@@ -166,7 +255,8 @@ class ChipServer:
         self.batch = batch
         self.mesh = mesh
         self.f_hz = f_hz
-        self.prefetch = prefetch
+        self.prefetch = int(prefetch)        # pipeline depth, 0 = sync
+        self.shared = shared
         self.programs: Dict[str, isa.Program] = dict(programs)
         self.plans: Dict[str, interpreter.InferencePlan] = {}
         self.artifacts: Dict[str, Any] = {}
@@ -187,18 +277,46 @@ class ChipServer:
             self._geom[name] = (io.height, io.width, io.in_channels)
             self._fns[name] = plan.make_serve_fn(
                 mesh=mesh, donate_frames=donate_frames, interpret=interpret,
-                megakernel=megakernel,
-                bb=min(8, batch // ndev))
-        self._inflight: Optional[Dict[str, Any]] = None
+                megakernel=megakernel)
+        # shared-array groups: compiled composites over exact tilings
+        self._groups: Dict[str, Tuple[str, ...]] = {}
+        self._composites: Dict[Tuple[str, ...], Dict[str, Any]] = {}
+        if shared:
+            for members in plan_shared_groups(self.programs):
+                cplan, cimage = interpreter.pack_programs(
+                    {m: self.programs[m] for m in members},
+                    {m: artifacts[m] for m in members})
+                if mesh is not None:
+                    cimage = sharding.replicate_artifact(mesh, cimage)
+                cfn = cplan.make_serve_fn(mesh=mesh,
+                                          donate_frames=donate_frames,
+                                          interpret=interpret)
+                self._composites[members] = dict(plan=cplan, image=cimage,
+                                                 fn=cfn)
+                for m in members:
+                    self._groups[m] = members
+        self._inflight: collections.deque = collections.deque()
+        self._fetch_pool: Optional[concurrent.futures.ThreadPoolExecutor] = (
+            concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="serve-fetch")
+            if self.prefetch else None)
         self.queue = FrameQueue(self.programs)
         # static per-program chip reports: computed once, reused by stats()
         self._reports = {n: energy.analyze_net(p, f_hz)
                          for n, p in self.programs.items()}
         self._next_rid = 0
         self._dispatches = 0
+        self._shared_dispatches = 0
+        self._util_sum = 0.0
         self._served = {name: 0 for name in self.programs}
         self._padded = {name: 0 for name in self.programs}
         self._host_wall_s = 0.0
+
+    @property
+    def shared_groups(self) -> Tuple[Tuple[str, ...], ...]:
+        """The compiled shared-array groups (empty unless ``shared=True``
+        and some resident S-modes tile the array exactly)."""
+        return tuple(self._composites)
 
     # -- request side -------------------------------------------------------
 
@@ -224,63 +342,137 @@ class ChipServer:
 
     # -- dispatch side ------------------------------------------------------
 
+    def _pad_frames(self, reqs: List[FrameRequest],
+                    geom: Tuple[int, int, int]):
+        """Stack a lane's pull into a full static batch (the always-on
+        pipeline doesn't idle: short lanes pad with the last real frame,
+        empty lanes with zeros; the burned slots are billed)."""
+        if reqs:
+            frames = np.stack([r.frame for r in reqs])
+            if len(reqs) < self.batch:
+                pad = np.broadcast_to(
+                    frames[-1], (self.batch - len(reqs),) + frames.shape[1:])
+                frames = np.concatenate([frames, pad])
+        else:
+            frames = np.zeros((self.batch,) + geom,
+                              dtype=np.int32)
+        return frames
+
     def _launch(self) -> Optional[Dict[str, Any]]:
-        """Pull + pad + dispatch one static batch; returns the in-flight
-        handle (device arrays, not yet synced) or ``None`` when drained.
-        Serving counters are billed at launch — the energy is burned the
-        moment the batch hits the array, synced or not."""
-        pulled = self.queue.next_batch(self.batch)
+        """Pull + pad + dispatch one static batch — solo or, with
+        ``shared=True`` and >= 2 backlogged lanes of a composite group,
+        one shared-array composite serving every backlogged member.
+        Returns the in-flight handle (device arrays, not yet synced) or
+        ``None`` when drained.  Serving counters are billed at launch —
+        the energy is burned the moment the batch hits the array, synced
+        or not."""
+        # with shared=False the group map is empty, so this degrades to
+        # exactly next_batch's solo pull (one lane per dispatch)
+        pulled = self.queue.next_batch_shared(self.batch, self._groups)
         if pulled is None:
             return None
-        name, reqs = pulled
-        n_real = len(reqs)
-        frames = np.stack([r.frame for r in reqs])
-        if n_real < self.batch:
-            # static batch: the always-on pipeline doesn't idle — pad with
-            # the last real frame and bill the burned slots.
-            pad = np.broadcast_to(frames[-1],
-                                  (self.batch - n_real,) + frames.shape[1:])
-            frames = np.concatenate([frames, pad])
-        frames = jnp.asarray(frames)
+
+        dispatch = self._dispatches
+        self._dispatches += 1
+        if len(pulled) > 1:
+            # composite dispatch: every group member's sub-array runs this
+            # batch — backlogged lanes carry frames, the rest burn padding.
+            members = self._groups[next(iter(pulled))]
+            comp = self._composites[members]
+            reqs_by = {m: pulled.get(m, []) for m in members}
+            frames = []
+            for m in members:
+                f = jnp.asarray(self._pad_frames(reqs_by[m], self._geom[m]))
+                if self.mesh is not None:
+                    f = sharding.scatter_frames(self.mesh, f)
+                frames.append(f)
+            logits, labels = comp["fn"](comp["image"], tuple(frames))
+            for m in members:
+                self._served[m] += len(reqs_by[m])
+                self._padded[m] += self.batch - len(reqs_by[m])
+            self._shared_dispatches += 1
+            self._util_sum += energy.array_occupancy(
+                [self.programs[m] for m in members if reqs_by[m]])
+            return dict(members=members, reqs=reqs_by, logits=logits,
+                        labels=labels, dispatch=dispatch)
+
+        (name, reqs), = pulled.items()
+        frames = jnp.asarray(self._pad_frames(reqs, self._geom[name]))
         if self.mesh is not None:
             frames = sharding.scatter_frames(self.mesh, frames)
         logits, labels = self._fns[name](self.artifacts[name], frames)
-        self._served[name] += n_real
-        self._padded[name] += self.batch - n_real
-        dispatch = self._dispatches
-        self._dispatches += 1
+        self._served[name] += len(reqs)
+        self._padded[name] += self.batch - len(reqs)
+        self._util_sum += 1.0 / self.programs[name].s
         return dict(name=name, reqs=reqs, logits=logits, labels=labels,
                     dispatch=dispatch)
 
+    @staticmethod
+    def _materialize(handle: Dict[str, Any]):
+        """Sync an in-flight dispatch's device arrays to host numpy (runs
+        on the fetch thread when prefetching)."""
+        if "members" in handle:
+            labels = tuple(np.asarray(jax.block_until_ready(l))
+                           for l in handle["labels"])
+            logits = tuple(np.asarray(l) for l in handle["logits"])
+        else:
+            labels = np.asarray(jax.block_until_ready(handle["labels"]))
+            logits = np.asarray(handle["logits"])
+        return logits, labels
+
     def _finish(self, handle: Dict[str, Any]) -> List[FrameResult]:
         """Block on an in-flight dispatch and materialize its results."""
+        if "future" in handle:
+            logits, labels = handle["future"].result()
+        else:
+            logits, labels = self._materialize(handle)
+        if "members" in handle:
+            out = []
+            for mi, m in enumerate(handle["members"]):
+                out.extend(
+                    FrameResult(rid=r.rid, program=m,
+                                label=int(labels[mi][i]),
+                                logits=logits[mi][i],
+                                dispatch=handle["dispatch"])
+                    for i, r in enumerate(handle["reqs"][m]))
+            return out
         name, reqs = handle["name"], handle["reqs"]
-        labels = np.asarray(jax.block_until_ready(handle["labels"]))
-        logits = np.asarray(handle["logits"])
         return [FrameResult(rid=r.rid, program=name, label=int(labels[i]),
                             logits=logits[i], dispatch=handle["dispatch"])
                 for i, r in enumerate(reqs)]
 
+    def _fill_pipeline(self) -> None:
+        """Launch dispatches until ``prefetch`` are in flight (or the
+        queue drains), handing each to the background fetch thread."""
+        while len(self._inflight) < self.prefetch:
+            handle = self._launch()
+            if handle is None:
+                return
+            if self._fetch_pool is not None:
+                handle["future"] = self._fetch_pool.submit(
+                    self._materialize, handle)
+            self._inflight.append(handle)
+
     def step(self) -> List[FrameResult]:
-        """One dispatch: pull a static batch, run its program, return
+        """One dispatch: pull a static batch, run its program(s), return
         results for the real (non-padding) frames.  [] once drained.
 
-        With ``prefetch=True`` the next batch is staged and dispatched
-        *before* blocking on the current one, so host-side frame staging
-        overlaps device execution; batches still leave the queue in
-        exactly the synchronous order, so fairness is untouched.
+        With ``prefetch=k`` up to k batches are staged and dispatched
+        *before* blocking on the oldest one, and finished results are
+        pulled to the host by a background thread; batches still leave
+        the queue in exactly the synchronous order, so fairness is
+        untouched.
         """
         t0 = time.perf_counter()
         try:
             if not self.prefetch:
                 cur = self._launch()
                 return [] if cur is None else self._finish(cur)
-            cur, self._inflight = self._inflight, None
-            if cur is None:
-                cur = self._launch()
-                if cur is None:
-                    return []
-            self._inflight = self._launch()    # stage N+1 while N runs
+            self._fill_pipeline()
+            if not self._inflight:
+                return []
+            cur = self._inflight.popleft()
+            self._fill_pipeline()              # stage N+1.. while N runs
             return self._finish(cur)
         finally:
             self._host_wall_s += time.perf_counter() - t0
@@ -294,6 +486,24 @@ class ChipServer:
                 return out
             out.extend(got)
 
+    def close(self) -> None:
+        """Release the background fetch thread, syncing (and discarding —
+        ``drain()`` first to collect them) any in-flight dispatches.  The
+        server keeps working afterwards with prefetch degraded to
+        synchronous fetch; safe to call more than once."""
+        while self._inflight:
+            self._finish(self._inflight.popleft())
+        if self._fetch_pool is not None:
+            self._fetch_pool.shutdown(wait=True)
+            self._fetch_pool = None
+
+    def __del__(self):  # pragma: no cover - interpreter-exit ordering
+        try:
+            if getattr(self, "_fetch_pool", None) is not None:
+                self._fetch_pool.shutdown(wait=False)
+        except Exception:
+            pass
+
     # -- accounting ---------------------------------------------------------
 
     def stats(self) -> ServeStats:
@@ -302,9 +512,12 @@ class ChipServer:
                                    reports=self._reports)
         total = sum(self._served.values())
         fps = total / self._host_wall_s if self._host_wall_s else 0.0
+        util = self._util_sum / self._dispatches if self._dispatches else 0.0
         return ServeStats(served=dict(self._served),
                           padded=dict(self._padded),
                           dispatches=self._dispatches,
                           host_wall_s=self._host_wall_s,
                           host_frames_per_s=fps,
-                          chip=chip)
+                          chip=chip,
+                          array_utilization=util,
+                          shared_dispatches=self._shared_dispatches)

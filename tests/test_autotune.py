@@ -1,0 +1,166 @@
+"""Persistent tile autotuner: cache semantics + resolution precedence.
+
+The autotuner must never change numerics (tiles are a pure schedule
+choice — covered by the megakernel/composite equivalence suites); these
+tests lock down the cache behaviour itself: fingerprinting, exact and
+nearest-batch lookup, cold-cache defaults, explicit-argument precedence,
+and that a tuned entry actually steers ``forward_mega``.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.chip import interpreter, networks
+from repro.kernels import autotune
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    autotune.invalidate()
+    yield path
+    autotune.invalidate()
+
+
+def _setup(program, batch=6, seed=0):
+    params = interpreter.init_params(jax.random.PRNGKey(seed), program)
+    io = program.instrs[0]
+    imgs = jax.random.randint(
+        jax.random.PRNGKey(seed + 1),
+        (batch, io.height, io.width, io.in_channels), 0, 2 ** io.bits)
+    return (interpreter.compile_plan(program),
+            interpreter.fold_params(params, program, packed=True),
+            interpreter.fold_params(params, program, image=True), imgs)
+
+
+def test_cold_cache_falls_back_to_defaults(tmp_cache):
+    program = networks.mnist5()
+    assert autotune.mega_tiles(program, 8) == (
+        autotune.DEFAULTS["mega"]["bb"], autotune.DEFAULTS["mega"]["ft"])
+    assert autotune.conv_tiles(program, 8) == (
+        autotune.DEFAULTS["staged_conv"]["bf"],
+        autotune.DEFAULTS["staged_conv"]["bb"])
+
+
+def test_explicit_arguments_beat_the_cache(tmp_cache):
+    program = networks.mnist5()
+    autotune.record("mega", autotune.program_key(program), 8,
+                    {"bb": 2, "ft": 32})
+    assert autotune.mega_tiles(program, 8) == (2, 32)
+    assert autotune.mega_tiles(program, 8, bb=16) == (16, 32)
+    assert autotune.mega_tiles(program, 8, bb=16, ft=0) == (16, 0)
+
+
+def test_lookup_exact_then_nearest_batch(tmp_cache):
+    program = networks.mnist5()
+    pkey = autotune.program_key(program)
+    autotune.record("mega", pkey, 8, {"bb": 8, "ft": 0})
+    autotune.record("mega", pkey, 64, {"bb": 16, "ft": 32})
+    assert autotune.mega_tiles(program, 8) == (8, 0)       # exact
+    assert autotune.mega_tiles(program, 64) == (16, 32)    # exact
+    assert autotune.mega_tiles(program, 48) == (16, 32)    # nearest (64)
+    assert autotune.mega_tiles(program, 9) == (8, 0)       # nearest (8)
+
+
+def test_program_and_backend_fingerprints_partition_entries(tmp_cache):
+    a, b = networks.mnist5(), networks.mnist5(classes=2)
+    assert autotune.program_key(a) != autotune.program_key(b)
+    assert autotune.program_key(a) == autotune.program_key(networks.mnist5())
+    autotune.record("mega", autotune.program_key(a), 8, {"bb": 2, "ft": 32})
+    # a different program never sees another program's entry
+    assert autotune.mega_tiles(b, 8) == (
+        autotune.DEFAULTS["mega"]["bb"], autotune.DEFAULTS["mega"]["ft"])
+    # entries are keyed under the live backend fingerprint
+    raw = json.loads(tmp_cache.read_text())
+    assert all(k.endswith(autotune.backend_fingerprint()) for k in raw)
+    # composite fingerprints are order-sensitive and distinct from solo
+    ck = autotune.composite_key([a, b])
+    assert ck != autotune.composite_key([b, a])
+    assert ck.startswith("comp-")
+
+
+def test_cache_persists_across_process_reload(tmp_cache):
+    program = networks.mnist5()
+    autotune.record("staged_conv", autotune.program_key(program), 8,
+                    {"bf": 32, "bb": 4})
+    autotune.invalidate()                      # simulate a fresh process
+    assert autotune.conv_tiles(program, 8) == (32, 4)
+
+
+def test_tune_mega_records_and_forward_consumes(tmp_cache):
+    """tune_mega measures candidates, persists the winner, and a
+    subsequent forward_mega with default tiles resolves through it —
+    bit-exact vs any explicit tiling."""
+    program = networks.mnist5()
+    plan, packed, image, imgs = _setup(program)
+    entry = autotune.tune_mega(plan, image, imgs, bb_candidates=(2, 4),
+                               ft_candidates=(0, 32), iters=1,
+                               interpret=True)
+    assert set(entry) == {"bb", "ft", "us"}
+    assert autotune.mega_tiles(program, imgs.shape[0]) == (
+        entry["bb"], entry["ft"])
+    ref = np.asarray(plan.forward(packed, imgs, interpret=True)[0])
+    got = np.asarray(plan.forward_mega(image, imgs, interpret=True)[0])
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_tune_staged_conv_records(tmp_cache):
+    program = networks.mnist5()
+    plan, packed, _image, imgs = _setup(program, seed=3)
+    entry = autotune.tune_staged_conv(plan, packed, imgs,
+                                      bf_candidates=(32, 64),
+                                      bb_candidates=(4,), iters=1,
+                                      interpret=True)
+    assert entry["bf"] in (32, 64) and entry["bb"] == 4
+    assert autotune.conv_tiles(program, imgs.shape[0]) == (
+        entry["bf"], entry["bb"])
+    # staged forward with tuned tiles stays bit-exact vs kernel defaults
+    ref = np.asarray(plan.forward(packed, imgs, interpret=True,
+                                  conv_tiles=(64, 8))[0])
+    got = np.asarray(plan.forward(packed, imgs, interpret=True)[0])
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_tune_composite_records_and_forward_consumes(tmp_cache):
+    """tune_composite caches under the composite fingerprint (not any
+    member's) and CompositePlan.forward resolves through it — bit-exact
+    vs explicit tiles."""
+    progs = {"a": networks.mnist5(), "b": networks.mnist5(classes=2),
+             "c": networks.mnist5(classes=3), "d": networks.mnist5(classes=5)}
+    arts, frames = {}, []
+    for i, (n, p) in enumerate(progs.items()):
+        params = interpreter.init_params(jax.random.PRNGKey(i), p)
+        arts[n] = interpreter.fold_params(params, p, packed=True)
+        io = p.instrs[0]
+        frames.append(jax.random.randint(
+            jax.random.PRNGKey(50 + i),
+            (4, io.height, io.width, io.in_channels), 0, 2 ** io.bits))
+    cplan, cimage = interpreter.pack_programs(progs, arts)
+    entry = autotune.tune_composite(cplan, cimage, tuple(frames),
+                                    bb_candidates=(2,), ft_candidates=(0, 32),
+                                    iters=1, interpret=True)
+    assert autotune.composite_tiles(cplan.programs, 4) == (
+        entry["bb"], entry["ft"])
+    # members' solo fingerprints stay cold — the entry is composite-keyed
+    assert autotune.mega_tiles(progs["a"], 4) == (
+        autotune.DEFAULTS["mega"]["bb"], autotune.DEFAULTS["mega"]["ft"])
+    ref = cplan.forward(cimage, tuple(frames), interpret=True, bb=8, ft=0)
+    got = cplan.forward(cimage, tuple(frames), interpret=True)  # via cache
+    for r, g in zip(ref[0], got[0]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_corrupt_cache_file_degrades_to_cold(tmp_cache):
+    """A broken cache file may never change behaviour — invalid JSON and
+    valid-but-non-dict JSON both degrade to the cold-cache defaults."""
+    defaults = (autotune.DEFAULTS["mega"]["bb"],
+                autotune.DEFAULTS["mega"]["ft"])
+    program = networks.mnist5()
+    for text in ("{not json", "[]", '"a string"', "3"):
+        tmp_cache.write_text(text)
+        autotune.invalidate()
+        assert autotune.mega_tiles(program, 8) == defaults, text

@@ -195,6 +195,57 @@ def test_prefetch_interleaved_with_submission(mnist_setup):
                                   labels_ref)
 
 
+def test_prefetch_depth_k_serves_identical_results(multi_setup):
+    """prefetch=k for any depth (incl. deeper than the queue) returns the
+    exact synchronous result stream — depth-k pipelining with async host
+    fetch is pure overlap, dispatch order and billing never change."""
+    progs, arts = multi_setup
+    frames = {n: _frames(p, 7, seed=40 + i)
+              for i, (n, p) in enumerate(progs.items())}
+    runs = {}
+    for depth in (0, 1, 2, 3, 16):
+        server = ChipServer(progs, arts, batch=2, interpret=True,
+                            prefetch=depth)
+        for i in range(7):
+            for n in progs:
+                server.submit(n, frames[n][i])
+        results = server.drain()
+        stats = server.stats()
+        runs[depth] = ([(r.rid, r.program, r.label, r.dispatch)
+                        for r in results],
+                       stats.served, stats.padded, stats.dispatches)
+    first = runs[0]
+    for depth, run in runs.items():
+        assert run == first, f"depth {depth} diverged"
+
+
+def test_prefetch_depth_k_interleaved_with_submission(mnist_setup):
+    """Depth-3 pipeline with frames arriving between steps: every frame
+    served exactly once, in arrival order."""
+    program, packed, frames, _, labels_ref = mnist_setup
+    server = ChipServer({"m": program}, {"m": packed}, batch=2,
+                        interpret=True, prefetch=3)
+    got = []
+    for i in range(len(frames)):
+        server.submit("m", frames[i])
+        got.extend(server.step())
+    got.extend(server.drain())
+    assert [r.rid for r in got] == list(range(len(frames)))
+    np.testing.assert_array_equal(np.array([r.label for r in got]),
+                                  labels_ref)
+
+
+def test_prefetch_bool_is_depth_one():
+    """Back-compat: prefetch=True means a depth-1 pipeline."""
+    program = networks.mnist5()
+    packed = _artifact(program)
+    server = ChipServer({"m": program}, {"m": packed}, batch=2,
+                        interpret=True, prefetch=True)
+    assert server.prefetch == 1
+    with pytest.raises(ValueError, match="prefetch"):
+        ChipServer({"m": program}, {"m": packed}, prefetch=-1)
+
+
 def test_megakernel_server_matches_staged(mnist_setup):
     """megakernel=True serving (weight image resident, zero inter-layer
     HBM) is bit-exact vs the staged server — with and without prefetch."""

@@ -1,0 +1,348 @@
+"""Shared-array composite dispatch: bit-exactness + scheduling + billing.
+
+The acceptance property of true sub-array sharing: when resident
+programs' S-modes tile the 256-channel array exactly, ONE composite
+``pallas_call`` per batch (``interpreter.CompositePlan`` /
+``kernels.megakernel.composite_forward``) must serve every member's
+frames *bit-identically* to dispatching each member solo — for every
+registry program combination tested, for random programs / lane mixes /
+S-mode combinations (hypothesis), for ragged and partial batches, and
+through the ``ChipServer(shared=True)`` scheduler with fairness and
+per-sub-array padding billing preserved.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chip import interpreter, isa, networks
+from repro.serving import ChipServer
+from repro.serving.scheduler import plan_shared_groups
+from tests.test_fold_pack_property import _random_bn_params, random_program
+
+
+def _frames(program, n, seed=0):
+    io = program.instrs[0]
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n, io.height, io.width, io.in_channels),
+        0, 2 ** io.bits))
+
+
+def _artifact(program, seed=0):
+    params = interpreter.init_params(jax.random.PRNGKey(seed), program)
+    return interpreter.fold_params(params, program, packed=True)
+
+
+def _solo_oracle(program, packed, frames):
+    plan = interpreter.compile_plan(program)
+    logits, labels = plan.forward(packed, jnp.asarray(frames),
+                                  interpret=True)
+    return np.asarray(logits), np.asarray(labels)
+
+
+def _assert_composite_matches_solo(progs, *, batches, seed=0, bb=2, ft=0):
+    """Build a composite over ``progs`` and check member-by-member
+    bit-exactness vs each member's solo staged forward."""
+    arts = {n: _artifact(p, seed=seed + i)
+            for i, (n, p) in enumerate(progs.items())}
+    cplan, cimage = interpreter.pack_programs(progs, arts)
+    frames = {n: _frames(p, b, seed=seed + 10 + i)
+              for i, ((n, p), b) in enumerate(zip(progs.items(), batches))}
+    logits, labels = cplan.forward(cimage, frames, interpret=True,
+                                   bb=bb, ft=ft)
+    for i, (n, p) in enumerate(progs.items()):
+        ref_logits, ref_labels = _solo_oracle(p, arts[n], frames[n])
+        np.testing.assert_array_equal(np.asarray(logits[i]), ref_logits,
+                                      err_msg=f"{n} logits")
+        np.testing.assert_array_equal(np.asarray(labels[i]), ref_labels,
+                                      err_msg=f"{n} labels")
+
+
+# ---------------------------------------------------------------------------
+# 1. Registry combinations: every exact tiling the registry can form
+# ---------------------------------------------------------------------------
+
+# (names -> program factory) per combination; ragged member batches on
+# purpose.  4xS4 with identical conv chains exercises the grouped
+# (stacked sub-array) body; mixed-topology combos exercise the
+# per-member body; 2xS2 and S2+2xS4 cover the other exact tilings.
+_REGISTRY_COMBOS = {
+    "4xS4_grouped": {
+        "mnist5": lambda: networks.mnist5(),
+        "wake": lambda: networks.mnist5(classes=2),
+        "tri": lambda: networks.mnist5(classes=3),
+        "five": lambda: networks.mnist5(classes=5),
+    },
+    "4xS4_mixed_topology": {
+        "mnist5": lambda: networks.mnist5(),
+        "face_detector": networks.face_detector,
+        "cifar9_s4": lambda: networks.cifar9(4),
+        "wake": lambda: networks.mnist5(classes=2),
+    },
+    "2xS2": {
+        "cifar9_s2": lambda: networks.cifar9(2),
+        "face_angles": networks.face_angles,
+    },
+    "S2+2xS4": {
+        "cifar9_s2": lambda: networks.cifar9(2),
+        "mnist5": lambda: networks.mnist5(),
+        "face_detector": networks.face_detector,
+    },
+}
+_SLOW_COMBOS = {"2xS2", "S2+2xS4", "4xS4_mixed_topology"}
+
+
+@pytest.mark.parametrize(
+    "combo", [pytest.param(c, marks=pytest.mark.slow) if c in _SLOW_COMBOS
+              else c for c in sorted(_REGISTRY_COMBOS)])
+def test_composite_bit_exact_on_registry_combos(combo):
+    """Composite dispatch == solo dispatch for every registry S-mode
+    tiling, with ragged member batches (1..4 frames per member)."""
+    progs = {n: f() for n, f in _REGISTRY_COMBOS[combo].items()}
+    _assert_composite_matches_solo(progs,
+                                   batches=[3, 1, 4, 2][:len(progs)],
+                                   seed=hash(combo) % 1000)
+
+
+def test_composite_f_tiling_is_pure_schedule():
+    """Any f-tile size gives identical composite results — tiling is a
+    streaming schedule, never a numeric choice."""
+    progs = {"a": networks.mnist5(), "b": networks.mnist5(classes=2),
+             "c": networks.mnist5(classes=3),
+             "d": networks.mnist5(classes=7)}
+    arts = {n: _artifact(p, seed=i) for i, (n, p) in enumerate(progs.items())}
+    cplan, cimage = interpreter.pack_programs(progs, arts)
+    frames = tuple(_frames(p, 3, seed=20 + i)
+                   for i, p in enumerate(progs.values()))
+    ref = cplan.forward(cimage, frames, interpret=True, bb=2, ft=0)[0]
+    for bb, ft in ((1, 32), (3, 32), (2, 33), (8, 64)):
+        got = cplan.forward(cimage, frames, interpret=True, bb=bb, ft=ft)[0]
+        for r, g in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r),
+                                          err_msg=f"bb={bb} ft={ft}")
+
+
+def test_pack_programs_rejects_inexact_tiling():
+    """The composite is only valid when sum(256/S) == 256 — the chip
+    cannot recombine sub-arrays that don't tile the array."""
+    progs = {"a": networks.mnist5(), "b": networks.mnist5(classes=2)}
+    arts = {n: _artifact(p) for n, p in progs.items()}
+    with pytest.raises(isa.ProgramError, match="tile the array"):
+        interpreter.pack_programs(progs, arts)
+    three = {"a": networks.mnist5(), "b": networks.mnist5(classes=2),
+             "c": networks.cifar9(2), "d": networks.cifar9(2, classes=3)}
+    with pytest.raises(isa.ProgramError, match="tile the array"):
+        interpreter.pack_programs(
+            three, {n: _artifact(p) for n, p in three.items()})
+
+
+def test_composite_image_packs_members_side_by_side():
+    """The composite weight image holds member m's conv words at F rows
+    [f_off_m, f_off_m + 256/S_m) — the side-by-side SRAM layout."""
+    progs = {"a": networks.mnist5(), "b": networks.mnist5(classes=2),
+             "c": networks.mnist5(classes=3), "d": networks.mnist5(classes=5)}
+    arts = {n: _artifact(p, seed=i) for i, (n, p) in enumerate(progs.items())}
+    cplan, cimage = interpreter.pack_programs(progs, arts)
+    assert cimage["cw"].shape[1] == isa.ARRAY_CHANNELS
+    off = 0
+    for i, (n, p) in enumerate(progs.items()):
+        img = interpreter.ensure_image(arts[n], p)
+        f = isa.ARRAY_CHANNELS // p.s
+        np.testing.assert_array_equal(
+            np.asarray(cimage["cw"][:img["cw"].shape[0],
+                                    off:off + f, :, :img["cw"].shape[3]]),
+            np.asarray(img["cw"]), err_msg=n)
+        np.testing.assert_array_equal(
+            np.asarray(cimage["ct"][:img["ct"].shape[0], off:off + f]),
+            np.asarray(img["ct"]), err_msg=n)
+        # member spec carries exactly this offset
+        conv_offsets = {st[6] for st in cplan.spec[i] if st[0] == "conv"}
+        assert conv_offsets == {off}
+        off += f
+
+
+# ---------------------------------------------------------------------------
+# 2. Hypothesis: random programs x random S tilings x ragged batches
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(tiling=st.sampled_from([(2, 2), (2, 4, 4), (4, 4, 4, 4)]),
+       seed=st.integers(0, 2 ** 16))
+def test_composite_matches_solo_on_random_programs(tiling, seed):
+    """Property: random valid member programs (random depths, pooling,
+    hidden FCs, IO precisions) under every exact S tiling, with ragged
+    per-member batches -> composite == solo, bit-exact per member."""
+    progs, arts, frames = {}, {}, {}
+    for i, s in enumerate(tiling):
+        name = f"p{i}"
+        prog = random_program(s, seed + 101 * i)
+        params = _random_bn_params(prog, seed + 13 * i)
+        progs[name] = prog
+        arts[name] = interpreter.fold_params(params, prog, packed=True)
+        frames[name] = _frames(prog, 1 + (seed + i) % 5, seed=seed + 29 * i)
+    cplan, cimage = interpreter.pack_programs(progs, arts)
+    bb = 1 + seed % 4
+    ft = (0, 32, 64)[seed % 3]
+    logits, labels = cplan.forward(cimage, frames, interpret=True,
+                                   bb=bb, ft=ft)
+    for i, n in enumerate(progs):
+        ref_logits, ref_labels = _solo_oracle(progs[n], arts[n], frames[n])
+        np.testing.assert_array_equal(np.asarray(logits[i]), ref_logits,
+                                      err_msg=f"{n} (s={progs[n].s})")
+        np.testing.assert_array_equal(np.asarray(labels[i]), ref_labels)
+
+
+# ---------------------------------------------------------------------------
+# 3. The shared-array server: scheduling, fairness, billing
+# ---------------------------------------------------------------------------
+
+import functools
+
+
+@functools.lru_cache(maxsize=1)
+def _quad():
+    """Four S=4 mnist5-family programs — one exact-tiling group.  (A
+    cached helper rather than a pytest fixture so the hypothesis
+    property below can use it too: the offline hypothesis stub cannot
+    inject fixtures into ``@given`` tests.)"""
+    progs = {"mnist5": networks.mnist5(),
+             "wake": networks.mnist5(classes=2),
+             "tri": networks.mnist5(classes=3),
+             "five": networks.mnist5(classes=5)}
+    arts = {n: _artifact(p, seed=i) for i, (n, p) in enumerate(progs.items())}
+    return progs, arts
+
+
+@pytest.fixture(scope="module")
+def quad_setup():
+    return _quad()
+
+
+def test_plan_shared_groups():
+    mk = networks.mnist5
+    # 4xS4 -> one group; leftover S4 pair -> no group
+    progs = {"a": mk(), "b": mk(classes=2), "c": mk(classes=3),
+             "d": mk(classes=5), "e": mk(classes=6), "f": mk(classes=7)}
+    assert plan_shared_groups(progs) == (("a", "b", "c", "d"),)
+    # S2 + 2xS4 packs across modes (widest first)
+    mixed = {"s4a": mk(), "s2": networks.cifar9(2), "s4b": mk(classes=2)}
+    assert plan_shared_groups(mixed) == (("s2", "s4a", "s4b"),)
+    # an S1 program fills the array alone: never a shared group
+    solo = {"s1": networks.cifar9(1), "s4": mk()}
+    assert plan_shared_groups(solo) == ()
+
+
+@settings(max_examples=6, deadline=None)
+@given(n_frames=st.sampled_from([(5, 5, 5, 5), (7, 1, 0, 3), (1, 1, 1, 1),
+                                 (9, 2, 5, 0)]),
+       batch=st.integers(2, 4), seed=st.integers(0, 2 ** 16))
+def test_shared_server_bit_exact_vs_solo_server(n_frames, batch, seed):
+    """Property: over random lane mixes and ragged/partial batches the
+    shared server returns the exact (rid, program, label, logits) set of
+    the solo server — sub-array sharing changes the schedule, never the
+    results."""
+    progs, arts = _quad()
+    frames = {n: _frames(p, 10, seed=seed + i)
+              for i, (n, p) in enumerate(progs.items())}
+    runs = {}
+    for shared in (False, True):
+        server = ChipServer(progs, arts, batch=batch, interpret=True,
+                            shared=shared)
+        rng_order = list(progs)
+        for i in range(max(n_frames)):
+            for n, k in zip(rng_order, n_frames):
+                if i < k:
+                    server.submit(n, frames[n][i])
+        res = server.drain()
+        runs[shared] = sorted(
+            ((r.rid, r.program, r.label, tuple(np.asarray(r.logits)))
+             for r in res))
+        assert server.queue.pending() == 0
+    assert runs[False] == runs[True]
+
+
+def test_shared_server_utilization_and_billing(quad_setup):
+    """A full 4-lane backlog dispatches as composites at utilization 1.0
+    with per-sub-array padding billed; an idle member's sub-array burns
+    its whole batch (the always-on array never idles)."""
+    progs, arts = quad_setup
+    server = ChipServer(progs, arts, batch=4, interpret=True, shared=True)
+    frames = {n: _frames(p, 4, seed=50 + i)
+              for i, (n, p) in enumerate(progs.items())}
+    for n in progs:
+        server.submit_many(n, frames[n])
+    server.drain()
+    stats = server.stats()
+    assert stats.dispatches == 1 and stats.shared_dispatches == 1
+    assert stats.array_utilization == pytest.approx(1.0)
+    assert stats.padded == {n: 0 for n in progs}
+
+    # ragged: two lanes backlogged, two idle -> their sub-arrays burn
+    server = ChipServer(progs, arts, batch=4, interpret=True, shared=True)
+    server.submit_many("mnist5", frames["mnist5"][:3])
+    server.submit("wake", frames["wake"][0])
+    res = server.drain()
+    stats = server.stats()
+    assert len(res) == 4
+    assert stats.dispatches == 1 and stats.shared_dispatches == 1
+    assert stats.padded == {"mnist5": 1, "wake": 3, "tri": 4, "five": 4}
+    # utilization only counts sub-arrays doing real work
+    assert stats.array_utilization == pytest.approx(0.5)
+    # the chip bill sees every burned slot
+    assert stats.chip.padded == stats.padded
+
+    # a single backlogged lane falls back to a solo dispatch: no phantom
+    # padding billed to the other members
+    server = ChipServer(progs, arts, batch=4, interpret=True, shared=True)
+    server.submit_many("tri", frames["tri"][:2])
+    res = server.drain()
+    stats = server.stats()
+    assert [r.program for r in res] == ["tri", "tri"]
+    assert stats.shared_dispatches == 0
+    assert stats.padded == {"mnist5": 0, "wake": 0, "tri": 2, "five": 0}
+    assert stats.array_utilization == pytest.approx(0.25)
+
+
+def test_shared_server_with_prefetch_depth_matches(quad_setup):
+    """shared=True composes with depth-k prefetch: identical result
+    stream, dispatch indices included."""
+    progs, arts = quad_setup
+    frames = {n: _frames(p, 6, seed=70 + i)
+              for i, (n, p) in enumerate(progs.items())}
+    runs = {}
+    for depth in (0, 1, 3):
+        server = ChipServer(progs, arts, batch=2, interpret=True,
+                            shared=True, prefetch=depth)
+        for i in range(6):
+            for n in progs:
+                server.submit(n, frames[n][i])
+        res = server.drain()
+        runs[depth] = [(r.rid, r.program, r.label, r.dispatch) for r in res]
+    assert runs[0] == runs[1] == runs[3]
+
+
+def test_shared_server_megakernel_solo_members(quad_setup):
+    """shared=True + megakernel=True: composite groups use the composite
+    kernel; a program outside any group still dispatches through its own
+    megakernel — both bit-exact vs the staged oracle."""
+    progs, arts = quad_setup
+    progs = dict(progs)
+    arts = dict(arts)
+    progs["owner"] = networks.cifar9(1, classes=2)     # S=1: never grouped
+    arts["owner"] = _artifact(progs["owner"], seed=9)
+    frames = {n: _frames(p, 3, seed=90 + i)
+              for i, (n, p) in enumerate(progs.items())}
+    oracle = {n: _solo_oracle(progs[n], arts[n], frames[n])[1]
+              for n in progs}
+    server = ChipServer(progs, arts, batch=2, interpret=True, shared=True,
+                        megakernel=True)
+    for n in progs:
+        server.submit_many(n, frames[n])
+    res = server.drain()
+    for n in progs:
+        got = [r.label for r in sorted(res, key=lambda r: r.rid)
+               if r.program == n]
+        np.testing.assert_array_equal(np.array(got), oracle[n], err_msg=n)
+    assert server.stats().shared_dispatches > 0

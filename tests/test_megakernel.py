@@ -68,8 +68,10 @@ def test_megakernel_bit_exact_on_every_registry_program(name):
 
 
 def test_megakernel_frame_tile_sizes_and_ragged_tiles():
-    """Any bb (dividing or ragged, larger than the batch, bb=1): identical
-    logits — tiling is a pure streaming schedule, not a numeric choice."""
+    """Any bb (dividing or ragged, larger than the batch, bb=1) and any
+    conv f-tile ft (untiled, dividing, non-dividing, unaligned, larger
+    than F): identical logits — tiling is a pure streaming schedule, not
+    a numeric choice."""
     program = networks.mnist5()
     params = _trained(program, seed=3)
     packed = interpreter.fold_params(params, program, packed=True)
@@ -79,8 +81,12 @@ def test_megakernel_frame_tile_sizes_and_ragged_tiles():
     ref = np.asarray(plan.forward(packed, imgs, interpret=True)[0])
     for bb in (1, 2, 3, 7, 16):
         got = np.asarray(plan.forward_mega(image, imgs, interpret=True,
-                                           bb=bb)[0])
+                                           bb=bb, ft=0)[0])
         np.testing.assert_array_equal(got, ref, err_msg=f"bb={bb}")
+    for ft in (0, 7, 32, 33, 48, 64, 1000):    # F=64 at S=4
+        got = np.asarray(plan.forward_mega(image, imgs, interpret=True,
+                                           bb=3, ft=ft)[0])
+        np.testing.assert_array_equal(got, ref, err_msg=f"ft={ft}")
 
 
 def test_weight_image_layout():
