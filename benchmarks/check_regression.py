@@ -20,9 +20,11 @@ Two kinds of checks:
 * **invariant keys** — machine-independent ratios that must never dip
   below 1: the megakernel must beat the staged plan
   (``megakernel_speedup_vs_staged``), the fused plan must beat the seed
-  path (``pipeline_fused_speedup``), and shared-array composite dispatch
+  path (``pipeline_fused_speedup``), shared-array composite dispatch
   must beat time-interleaved solo dispatch
-  (``serve_shared_speedup_vs_solo``).  These hold on any host, so they
+  (``serve_shared_speedup_vs_solo``), and the always-on cascade must
+  cost at most the recognizer alone
+  (``cascade_savings_vs_recognizer``).  These hold on any host, so they
   are hard floors rather than tolerance bands.
 
 Keys present on only ONE side (a metric newly added by this PR, or one
@@ -45,11 +47,16 @@ import json
 import sys
 
 THROUGHPUT_KEYS = ("pipeline_frames_per_s", "serve_frames_per_s",
-                   "serve_frames_per_s_multi", "serve_frames_per_s_shared")
+                   "serve_frames_per_s_multi", "serve_frames_per_s_shared",
+                   "serve_frames_per_s_cascade")
 INVARIANT_FLOORS = {
     "megakernel_speedup_vs_staged": 1.0,
     "pipeline_fused_speedup": 1.0,
     "serve_shared_speedup_vs_solo": 1.0,
+    # the cascade's measured uJ/frame must stay at or below running the
+    # recognizer (the big net) on every frame — the whole point of the
+    # detector stage; holds on any host (pure energy-model ratio)
+    "cascade_savings_vs_recognizer": 1.0,
 }
 
 

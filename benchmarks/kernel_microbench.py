@@ -35,7 +35,18 @@ lowers through Mosaic):
    per batch runs all four sub-arrays concurrently) — the paired
    speedup, both frames/s figures and the measured ``array_utilization``
    go into the baseline, and the regression guard holds the speedup
-   floor at 1.0.
+   floor at 1.0;
+7. the **always-on cascade** (face detector -> owner recognizer): the
+   measured chip-model uJ/frame of screening every frame with the 0.92
+   uJ S=4 detector and escalating only logit-margin positives to the
+   14.4 uJ S=1 recognizer, vs running the recognizer on every frame —
+   ``cascade_savings_vs_recognizer`` is floored at 1.0 by the
+   regression guard (the cascade must never cost more than the big net
+   alone), plus the cascade's host-side frames/s;
+8. the **operating-point controller**: a cifar9 family served under a
+   tightened energy budget — ``controller_downshift_ratio`` records the
+   fraction of dispatches the controller moved below the top operating
+   point (0 would mean the budget knob does nothing).
 
 Results go to ``BENCH_fresh.json`` (override with ``BENCH_KERNELS_JSON``);
 ``benchmarks/check_regression.py`` compares a fresh run against the
@@ -494,6 +505,123 @@ def _bench_shared_serve(results):
     return ok
 
 
+def _bench_cascade(results):
+    """The paper's always-on hierarchy as a measured serving path: the
+    S=4 face detector (0.92 uJ/f analogue) screens every frame, only
+    logit-margin positives escalate to the S=1 owner recognizer (14.4
+    uJ/f analogue).  The measured uJ/frame must stay strictly below
+    running the recognizer on every frame at identical escalated labels
+    — ``cascade_savings_vs_recognizer`` is a >= 1.0 floor in
+    ``check_regression.py``."""
+    from repro.launch import chip_serve
+    from repro.serving import CascadePipeline, ChipServer
+
+    batch, n_frames = 4, 12
+    det, rec = networks.face_detector(), networks.owner_detector()
+    progs = {"det": det, "rec": rec}
+    arts = {n: chip_serve.build_artifact(p, seed=70 + i, warm_bn=True)
+            for i, (n, p) in enumerate(progs.items())}
+    frames = chip_serve.frame_stream(det, n_frames, seed=90)
+    rec_plan = interpreter.compile_plan(rec)
+    rec_oracle = np.asarray(jax.jit(
+        lambda pk, im: rec_plan.forward(pk, im)[1])(
+            arts["rec"], jnp.asarray(frames)))
+    # pin the escalation threshold at the detector's median logit margin
+    # over this stream: an untrained detector has no calibrated zero
+    # point, so thresholding at the median is what a deployment would do
+    # to hold a target escalation rate (here <= ~50%)
+    det_plan = interpreter.compile_plan(det)
+    det_logits = np.asarray(jax.jit(
+        lambda pk, im: det_plan.forward(pk, im)[0])(
+            arts["det"], jnp.asarray(frames)))
+    margin = float(np.median(det_logits[:, 1] - det_logits[:, 0]))
+
+    def run_once():
+        server = ChipServer(progs, arts, batch=batch)
+        casc = CascadePipeline(server, "det", "rec", positive_class=1,
+                               margin=margin)
+        t0 = time.perf_counter()
+        casc.submit_many(frames)
+        out = casc.drain()
+        dt = time.perf_counter() - t0
+        return casc, out, dt
+
+    run_once()                                 # warm the compile caches
+    casc, out, dt = run_once()
+    rep = casc.report()
+    # escalated labels must be bit-exact vs the recognizer run offline
+    # on those same frames
+    ok = all(int(rec_oracle[c.rid]) == c.label
+             for c in out if c.escalated)
+    fps = len(out) / dt
+
+    print(f"\n== Always-on cascade (face_detector -> owner_detector, "
+          f"batch={batch}) ==")
+    print(f"escalation rate    : {rep.escalation_rate:.2f} "
+          f"({rep.escalated}/{rep.frames} frames)")
+    print(f"cascade bill       : {rep.uj_per_frame:.2f} uJ/frame "
+          f"(det {rep.detector_uj:.2f} + rate x rec {rep.recognizer_uj:.2f})")
+    print(f"recognizer-on-all  : {rep.uj_per_frame_recognizer_only:.2f} "
+          f"uJ/frame -> {rep.savings:.2f}x saved")
+    print(f"host throughput    : {fps:,.0f} frames/s; escalated labels "
+          f"bit-exact vs offline recognizer: {ok}")
+    results["cascade_uj_per_frame"] = round(rep.uj_per_frame, 3)
+    results["cascade_recognizer_only_uj_per_frame"] = round(
+        rep.uj_per_frame_recognizer_only, 3)
+    results["cascade_savings_vs_recognizer"] = round(rep.savings, 3)
+    results["cascade_escalation_rate"] = round(rep.escalation_rate, 3)
+    results["serve_frames_per_s_cascade"] = round(fps, 1)
+    return ok
+
+
+def _bench_controller(results):
+    """The operating-point controller under a tightened energy budget:
+    a cifar9 family (full-depth S=4 + depth-truncated S=4) served with
+    the budget pinned halfway between the two variants' steady-state
+    powers, so the controller must visibly downshift —
+    ``controller_downshift_ratio`` lands strictly between 0 and 1."""
+    from repro.launch import chip_serve
+    from repro.serving import ChipServer
+
+    batch, n_frames = 4, 24
+    fam = {"cifar9_s4": networks.cifar9(4),
+           "cifar9_s4t": networks.cifar9_truncated()}
+    arts = {n: chip_serve.build_artifact(p, seed=80 + i, warm_bn=True)
+            for i, (n, p) in enumerate(fam.items())}
+    pts = energy.operating_points(fam, networks.ACCURACY)
+    powers = {p.name: p.power_uj_s for p in pts}
+    budget = (max(powers.values()) + min(powers.values())) / 2
+
+    def serve(budget_uj_s):
+        server = ChipServer(fam, arts, batch=batch,
+                            families={"cifar10": tuple(fam)},
+                            budget_uj_s=budget_uj_s)
+        server.submit_many("cifar10",
+                           chip_serve.frame_stream(fam["cifar9_s4"],
+                                                   n_frames, seed=95))
+        server.drain()
+        return server.stats()
+
+    serve(None)                                # warm the compile caches
+    stats = serve(budget)
+    ok = 0.0 < stats.downshift_ratio < 1.0
+    print(f"\n== Operating-point controller (cifar9_s4 <-> cifar9_s4t, "
+          f"budget {budget:,.0f} uJ/s) ==")
+    print(f"operating points   : " + " > ".join(
+        f"{p.name}[{p.uj_per_frame:.2f}uJ/f, {powers[p.name]:,.0f}uJ/s]"
+        for p in pts))
+    print(f"variant dispatches : {stats.variant_dispatches} "
+          f"(downshift ratio {stats.downshift_ratio:.2f}, "
+          f"array utilization {stats.array_utilization:.2f})")
+    print(f"energy billed      : {stats.energy_uj:,.0f} uJ under the "
+          f"budget; mixes both points: {ok}")
+    results["controller_downshift_ratio"] = round(stats.downshift_ratio, 3)
+    results["controller_array_utilization"] = round(
+        stats.array_utilization, 3)
+    results["controller_budget_uj_s"] = round(budget, 1)
+    return ok
+
+
 def run(csv: bool = True):
     import platform
     results = {"backend": jax.default_backend(),
@@ -507,7 +635,10 @@ def run(csv: bool = True):
     ok_mega = _bench_megakernel(results)
     ok_serve = _bench_serve(results)
     ok_shared = _bench_shared_serve(results)
-    ok = ok_mm and ok_pipe and ok_mega and ok_serve and ok_shared
+    ok_cascade = _bench_cascade(results)
+    ok_ctrl = _bench_controller(results)
+    ok = (ok_mm and ok_pipe and ok_mega and ok_serve and ok_shared
+          and ok_cascade and ok_ctrl)
     results["autotune_cache"] = autotune.cache_path()
 
     with open(BENCH_JSON, "w") as f:

@@ -247,6 +247,120 @@ def array_occupancy(programs) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Operating points: the energy-accuracy Pareto front of a program family
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """One point on a family's energy-accuracy curve (paper Fig. 5)."""
+    name: str
+    s: int
+    uj_per_frame: float         # I2L energy per inference, µJ
+    frames_per_s: float         # at the analysis f_hz
+    power_uj_s: float           # steady-state power analogue, µJ/s (= µW)
+    accuracy: float             # nominal task accuracy (paper anchors)
+    report: NetReport
+
+
+def operating_points(programs, accuracy=None, f_hz: float = F_EMIN):
+    """The Pareto-filtered operating points of a program family.
+
+    ``programs`` maps variant names to validated ISA programs (e.g. one
+    task compiled at S=1/S=2/S=4 and truncated depth — see
+    ``networks.FAMILIES``); ``accuracy`` maps the same names to nominal
+    task accuracies.  The accuracy scale must be consistent across the
+    whole family for the Pareto sort to mean anything, so declared
+    accuracies are used only when *every* program has one; otherwise the
+    entire family falls back to an ops-count proxy (more binary ops =
+    more accurate, which orders width/depth variants the way Fig. 5
+    does).  Returns a tuple of :class:`OperatingPoint` sorted most
+    accurate (and most expensive) first, with dominated points removed —
+    a point survives only if it is strictly cheaper than every more
+    accurate point, so walking the tuple front-to-back always trades
+    accuracy for energy, exactly the downshift axis the serving
+    controller moves along.
+    """
+    accuracy = dict(accuracy or {})
+    anchored = all(name in accuracy for name in programs)
+    pts = []
+    for name, p in programs.items():
+        rep = analyze_net(p, f_hz)
+        acc = (accuracy[name] if anchored
+               else rep.ops_per_inference)     # consistent ops proxy
+        pts.append(OperatingPoint(
+            name=name, s=p.s,
+            uj_per_frame=rep.i2l_energy_per_inference * 1e6,
+            frames_per_s=rep.inferences_per_s,
+            power_uj_s=rep.power_w * 1e6,
+            accuracy=acc, report=rep))
+    pts.sort(key=lambda op: (-op.accuracy, op.uj_per_frame))
+    front = []
+    for op in pts:
+        if not front or op.uj_per_frame < front[-1].uj_per_frame:
+            front.append(op)
+    return tuple(front)
+
+
+# ---------------------------------------------------------------------------
+# Cascade accounting: cheap detector screening an expensive recognizer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CascadeReport:
+    """Energy bill for a two-stage always-on cascade.
+
+    The paper's flagship deployment: the 0.92 uJ/f S=4 face detector
+    screens every frame and only escalates positives to the 14.4 uJ/f
+    S=1 recognizer, so the per-frame cost is ``det + rate * rec`` —
+    strictly below recognizing every frame whenever the escalation rate
+    stays under ``1 - det/rec``.  ``*_padded`` bill the static-batch
+    slots each serving lane burned (the always-on array never idles).
+    """
+    frames: int                       # frames entering the cascade
+    escalated: int                    # frames promoted to the recognizer
+    escalation_rate: float
+    detector_uj: float                # per-inference I2L energy, µJ
+    recognizer_uj: float
+    uj_per_frame: float               # cascade bill / submitted frame
+    uj_per_frame_recognizer_only: float  # baseline: recognizer on every
+                                         # frame, zero padding
+    savings: float                    # baseline / cascade (>= 1 when the
+                                      # cascade pays off)
+
+
+def cascade_report(detector: isa.Program, recognizer: isa.Program,
+                   frames: int, escalated: int, *,
+                   detector_padded: int = 0, recognizer_padded: int = 0,
+                   f_hz: float = F_EMIN,
+                   reports: dict | None = None) -> CascadeReport:
+    """Bill a detector->recognizer cascade: every submitted frame burns
+    detector energy (plus the detector lane's padding), every escalated
+    frame additionally burns recognizer energy (plus that lane's
+    padding).  The baseline is the tightest competitor — the recognizer
+    on every frame with zero padding — so ``savings >= 1`` is a real
+    claim, not an artifact of batch fill."""
+    if escalated > frames:
+        raise ValueError(
+            f"escalated {escalated} exceeds submitted frames {frames}")
+    if reports is None:
+        reports = {"det": analyze_net(detector, f_hz),
+                   "rec": analyze_net(recognizer, f_hz)}
+    det_uj = reports["det"].i2l_energy_per_inference * 1e6
+    rec_uj = reports["rec"].i2l_energy_per_inference * 1e6
+    total_uj = ((frames + detector_padded) * det_uj
+                + (escalated + recognizer_padded) * rec_uj)
+    per_frame = total_uj / frames if frames else 0.0
+    baseline = rec_uj
+    return CascadeReport(
+        frames=frames, escalated=escalated,
+        escalation_rate=escalated / frames if frames else 0.0,
+        detector_uj=det_uj, recognizer_uj=rec_uj,
+        uj_per_frame=per_frame,
+        uj_per_frame_recognizer_only=baseline,
+        savings=baseline / per_frame if per_frame else 0.0)
+
+
+# ---------------------------------------------------------------------------
 # Serving-mix accounting: the chip time-shared across resident programs
 # ---------------------------------------------------------------------------
 

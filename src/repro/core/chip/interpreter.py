@@ -438,6 +438,42 @@ def compile_plan(program: isa.Program) -> InferencePlan:
                          mega=tuple(mega))
 
 
+def compile_family(variants: Mapping[str, isa.Program]
+                   ) -> Dict[str, InferencePlan]:
+    """Compile a program *family*: one task at several operating points.
+
+    Family members (e.g. cifar9 at S=1/S=2/S=4 and truncated depth, see
+    ``networks.FAMILIES``) must be interchangeable per frame: identical
+    IO geometry (height, width, raw channels, input precision) so any
+    submitted frame can be served by any member, and an identical class
+    count so their labels live in one space.  Validates both and returns
+    ``{variant name: InferencePlan}`` — the serving layer's
+    operating-point controller swaps among these per dispatch.
+    """
+    if not variants:
+        raise ValueError("compile_family needs at least one variant")
+    plans: Dict[str, InferencePlan] = {}
+    ref_name = ref_io = ref_classes = None
+    for name, prog in variants.items():
+        isa.validate(prog)
+        io = prog.instrs[0]
+        geom = (io.height, io.width, io.in_channels, io.bits)
+        classes = prog.instrs[-1].out_features
+        if ref_io is None:
+            ref_name, ref_io, ref_classes = name, geom, classes
+        elif geom != ref_io:
+            raise isa.ProgramError(
+                f"family variants disagree on IO geometry: {ref_name} takes "
+                f"(h, w, c, bits) = {ref_io}, {name} takes {geom} — one "
+                "frame stream must be servable by every variant")
+        elif classes != ref_classes:
+            raise isa.ProgramError(
+                f"family variants disagree on class count: {ref_name} has "
+                f"{ref_classes}, {name} has {classes}")
+        plans[name] = compile_plan(prog)
+    return plans
+
+
 # ---------------------------------------------------------------------------
 # Composite plans: true sub-array sharing across resident programs
 # ---------------------------------------------------------------------------
@@ -466,8 +502,14 @@ class CompositePlan:
     def classes(self) -> Tuple[int, ...]:
         return tuple(sp[-1][2] for sp in self.spec)
 
+    @property
+    def n_groups(self) -> int:
+        """Member-group count of the composite spec (per-group ``ft``
+        tuples carry one entry per group)."""
+        return len(kops.member_groups(self.spec))
+
     def forward(self, image, frames, interpret: bool | None = None,
-                bb: Optional[int] = None, ft: Optional[int] = None):
+                bb: Optional[int] = None, ft=None):
         """Shared dispatch: per-member frames -> per-member (logits, labels).
 
         ``frames`` is a mapping keyed by member name or a sequence in
@@ -475,14 +517,19 @@ class CompositePlan:
         the longest internally, padding trimmed on return).  Returns
         (logits, labels) as tuples in ``names`` order.  ``bb``/``ft``
         default through the autotune cache under the composite's own
-        fingerprint.
+        fingerprint; a per-group tuned entry resolves ``ft`` to a tuple
+        with one f-tile per member group (pass an int or tuple
+        explicitly to override).  Tile sizes are a pure schedule choice
+        — bit-exact for every setting.
         """
         if isinstance(frames, Mapping):
             frames = tuple(frames[n] for n in self.names)
         else:
             frames = tuple(frames)
         batch = max(f.shape[0] for f in frames)
-        bb, ft = autotune.composite_tiles(self.programs, batch, bb=bb, ft=ft)
+        bb, ft = autotune.composite_tiles(self.programs, batch, bb=bb, ft=ft,
+                                          per_group=True,
+                                          n_groups=self.n_groups)
         outs = kops.composite_forward(image, frames, spec=self.spec,
                                       bb=bb, ft=ft, interpret=interpret)
         logits = tuple(o.astype(jnp.float32) for o in outs)

@@ -22,6 +22,12 @@ shape and datapath).  This module owns that choice:
   an exact cache hit, then the nearest-batch entry for the same
   program+backend, and a cold cache falls back to the historical
   defaults — tuning is always a pure perf choice, never a numeric one.
+* Entry keys carry a schema version prefix (``v2/...``): when the tuned
+  fields or the kernel schedule they describe change shape (e.g. v2
+  added per-member-group composite f-tiles and the member-DMA/compute
+  overlap), the version bumps and every stale entry silently degrades
+  to the cold-cache defaults instead of mis-steering the new kernel —
+  a stale ``BENCH_autotune.json`` is never an error, just cold.
 
 The bench job ships the cache next to ``BENCH_kernels.json`` so CI (and
 the next session) start warm.
@@ -41,6 +47,7 @@ from repro.core.chip import isa
 
 DEFAULT_CACHE = "BENCH_autotune.json"
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+SCHEMA = 2          # bump when tuned fields / kernel schedule change shape
 
 # the pre-autotuner defaults, kept as the documented cold-cache behaviour
 DEFAULTS = {
@@ -80,7 +87,9 @@ def composite_key(programs: Iterable[isa.Program]) -> str:
 
 
 def _entry_key(kind: str, pkey: str, batch: int) -> str:
-    return f"{kind}/{pkey}/b{int(batch)}/{backend_fingerprint()}"
+    # the vN prefix versions the schema: entries written for an older
+    # kernel schedule never match and degrade gracefully to defaults
+    return f"v{SCHEMA}/{kind}/{pkey}/b{int(batch)}/{backend_fingerprint()}"
 
 
 def _load() -> Dict[str, dict]:
@@ -113,7 +122,7 @@ def lookup(kind: str, pkey: str, batch: int) -> Optional[dict]:
     hit = cache.get(_entry_key(kind, pkey, batch))
     if hit is not None:
         return hit
-    prefix = f"{kind}/{pkey}/b"
+    prefix = f"v{SCHEMA}/{kind}/{pkey}/b"
     suffix = f"/{backend_fingerprint()}"
     nearest = None
     for key, entry in cache.items():
@@ -163,9 +172,29 @@ def mega_tiles(program: isa.Program, batch: int,
 
 
 def composite_tiles(programs: Iterable[isa.Program], batch: int,
-                    bb: Optional[int] = None, ft: Optional[int] = None):
-    """(bb, ft) for a composite dispatch of ``programs`` at ``batch``."""
-    return _resolve("mega", composite_key(programs), batch, bb=bb, ft=ft)
+                    bb: Optional[int] = None, ft=None, *,
+                    per_group: bool = False, n_groups: Optional[int] = None):
+    """(bb, ft) for a composite dispatch of ``programs`` at ``batch``.
+
+    Default resolution returns the composite's single tuned ``ft``.
+    With ``per_group=True`` (and ``n_groups``, the member-group count of
+    the composite's spec) a tuned per-group entry (``ftg``) resolves to
+    a tuple with one f-tile per group; entries whose group count doesn't
+    match (or predate per-group tuning) fall back to the global ``ft``.
+    Explicit arguments always win, in either form.
+    """
+    if ft is not None:
+        return (_resolve("mega", composite_key(programs), batch,
+                         bb=bb, ft=0)[0], ft)
+    pkey = composite_key(programs)
+    bb_r, ft_r = _resolve("mega", pkey, batch, bb=bb, ft=ft)
+    if per_group:
+        entry = lookup("mega", pkey, batch) or {}
+        ftg = entry.get("ftg")
+        if isinstance(ftg, (list, tuple)) and (
+                n_groups is None or len(ftg) == n_groups):
+            return bb_r, tuple(int(f) for f in ftg)
+    return bb_r, ft_r
 
 
 def conv_tiles(program: isa.Program, batch: int,
@@ -202,8 +231,8 @@ def _ft_candidates(f: int, candidates) -> list:
     return sorted(out)
 
 
-def tune_mega(plan, image, frames, *, bb_candidates=(2, 4, 8, 16),
-              ft_candidates=(0, 32, 64, 128), iters: int = 3,
+def tune_mega(plan, image, frames, *, bb_candidates=(2, 4, 8, 16, 32),
+              ft_candidates=(0, 16, 32, 64, 128, 256), iters: int = 3,
               interpret: Optional[bool] = None) -> dict:
     """Measure the megakernel candidate grid for ``plan`` on this backend
     and cache the winner under (program, backend, batch).  Returns the
@@ -224,29 +253,64 @@ def tune_mega(plan, image, frames, *, bb_candidates=(2, 4, 8, 16),
     return record("mega", program_key(program), batch, entry)
 
 
-def tune_composite(cplan, image, frames, *, bb_candidates=(2, 4, 8, 16),
-                   ft_candidates=(0, 32, 64), iters: int = 3,
+def tune_composite(cplan, image, frames, *, bb_candidates=(2, 4, 8, 16, 32),
+                   ft_candidates=(0, 16, 32, 64, 128), iters: int = 3,
+                   per_group: bool = True,
                    interpret: Optional[bool] = None) -> dict:
-    """Tune a composite's shared (bb, ft) and cache under the composite
-    fingerprint."""
+    """Tune a composite's (bb, ft) and cache under the composite
+    fingerprint.
+
+    Phase 1 sweeps one global (bb, ft) grid exactly like ``tune_mega``.
+    Phase 2 (``per_group=True``, the default) refines each member
+    *group's* f-tile independently around the phase-1 winner — groups of
+    different sub-array widths (a 2xS2 group next to two S=4 singletons,
+    say) rarely share a best ``ft``.  The entry records both: ``ft`` is
+    the global winner (what pre-per-group readers resolve), ``ftg`` the
+    per-group tuple (what ``CompositePlan.forward`` resolves).
+    """
+    from repro.kernels.megakernel import member_groups
+
     frames = tuple(frames)
     batch = max(f.shape[0] for f in frames)
     fmin = min(isa.ARRAY_CHANNELS // p.s for p in cplan.programs)
+    groups = member_groups(cplan.spec)
+
+    def timed(bb, ft):
+        def fwd(image, frames, _bb=bb, _ft=ft):
+            return cplan.forward(image, frames, interpret=interpret,
+                                 bb=_bb, ft=_ft)
+        return _time_us(jax.jit(fwd), image, frames, iters=iters)
+
     best = None
     for bb in sorted({min(b, batch) for b in bb_candidates}):
         for ft in _ft_candidates(fmin, ft_candidates):
-            def fwd(image, frames, _bb=bb, _ft=ft):
-                return cplan.forward(image, frames, interpret=interpret,
-                                     bb=_bb, ft=_ft)
-            us = _time_us(jax.jit(fwd), image, frames, iters=iters)
+            us = timed(bb, ft)
             if best is None or us < best[0]:
                 best = (us, bb, ft)
-    entry = {"bb": best[1], "ft": best[2], "us": round(best[0], 1)}
+    best_us, bb, ft = best
+
+    ftg = [ft] * len(groups)
+    if per_group and len(groups) > 1:
+        for gi, group in enumerate(groups):
+            # this group's conv width bounds its valid f-tiles
+            convs = [st[4] for st in cplan.spec[group[0]]
+                     if st[0] == "conv"]
+            fg = min(convs) if convs else 0
+            for cand in _ft_candidates(fg, ft_candidates) if fg else [0]:
+                if cand == ftg[gi]:
+                    continue
+                trial = tuple(ftg[:gi] + [cand] + ftg[gi + 1:])
+                us = timed(bb, trial)
+                if us < best_us:
+                    best_us, ftg[gi] = us, cand
+    entry = {"bb": bb, "ft": ft, "ftg": list(ftg),
+             "us": round(best_us, 1)}
     return record("mega", composite_key(cplan.programs), batch, entry)
 
 
-def tune_staged_conv(plan, packed, frames, *, bf_candidates=(32, 64, 128),
-                     bb_candidates=(4, 8, 16), iters: int = 3,
+def tune_staged_conv(plan, packed, frames, *,
+                     bf_candidates=(16, 32, 64, 128, 256),
+                     bb_candidates=(2, 4, 8, 16, 32), iters: int = 3,
                      interpret: Optional[bool] = None) -> dict:
     """Tune the staged pipeline's fused-conv (bf, bb) tiles for ``plan``
     and cache under (program, backend, batch)."""

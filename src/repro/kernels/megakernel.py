@@ -29,7 +29,9 @@ model in one ``pallas_call``:
   result — but it bounds the dominant live value, the int32 accumulator
   ``bb*(H-1)*(W-1)*ft*4B``, which is the S=1 VMEM-headroom knob.  The
   best ``bb``/``ft`` per (program, backend, batch) comes from the
-  persistent autotune cache (``kernels.autotune``).
+  persistent autotune cache (``kernels.autotune``); a composite accepts
+  one ``ft`` per member *group* (groups of different sub-array widths
+  want different f-tiles), as a tuple in ``member_groups`` order.
 * **Multi-program composite dispatch (sub-array sharing).**  When several
   resident programs' S-modes tile the 256-channel array exactly (4xS4,
   2xS2, 2xS4+1xS2, ...), their weight images pack side-by-side on the F
@@ -205,16 +207,39 @@ def _member_groups(spec):
     return tuple(tuple(v) for v in classes.values())
 
 
-def _run_members(tiles, cw, ct, cf, fw, spec, ft):
-    """All members of a composite on their VMEM frame tiles -> logits."""
+def member_groups(spec):
+    """Public alias of :func:`_member_groups`: the composite's sub-array
+    groups, in the order per-group tile overrides (``ft`` tuples) index."""
+    return _member_groups(spec)
+
+
+def _group_ft(ft, gi: int) -> int:
+    """Resolve the f-tile for member group ``gi``: a plain int applies to
+    every group, a tuple carries one entry per group."""
+    return ft[gi] if isinstance(ft, tuple) else ft
+
+
+def _run_members(read, cw, ct, cf, fw, spec, ft, wait=None):
+    """All members of a composite on their VMEM frame tiles -> logits.
+
+    ``read(m)`` yields member m's frame tile; ``wait(m)`` (when given)
+    blocks on member m's input DMA and is called immediately before the
+    member's group computes — so member group k+1's copy keeps streaming
+    while group k convolves, instead of every member's DMA completing
+    before any compute starts.
+    """
     logits = [None] * len(spec)
-    for group in _member_groups(spec):
+    for gi, group in enumerate(_member_groups(spec)):
+        if wait is not None:
+            for m in group:
+                wait(m)
+        gft = _group_ft(ft, gi)
         if len(group) == 1:
             m, = group
-            logits[m] = _run_member(tiles[m], cw, ct, cf, fw, spec[m], ft)
+            logits[m] = _run_member(read(m), cw, ct, cf, fw, spec[m], gft)
         else:
-            outs = _run_group([tiles[m] for m in group], cw, ct, cf, fw,
-                              [spec[m] for m in group], ft)
+            outs = _run_group([read(m) for m in group], cw, ct, cf, fw,
+                              [spec[m] for m in group], gft)
             for m, lg in zip(group, outs):
                 logits[m] = lg
     return logits
@@ -254,11 +279,14 @@ def _composite_kernel(*refs, spec, bb: int, n_tiles: int, ft: int):
         for p in range(nm):
             in_copy(p, nxt, jnp.minimum(i + 1, n_tiles - 1)).start()
 
-    for p in range(nm):
-        in_copy(p, slot, i).wait()
-    logits = _run_members([fbuf[p][slot] for p in range(nm)],
+    # input waits are issued per member group, right before that group's
+    # compute (_run_members): member group k+1's DMA keeps streaming while
+    # group k convolves — the chip's IO-pads-during-CONV overlap, per
+    # sub-array — instead of a barrier on every member's copy up front.
+    logits = _run_members(lambda p: fbuf[p][slot],
                           cw_ref[...], ct_ref[...], cf_ref[...], fw_ref[...],
-                          spec, ft)
+                          spec, ft,
+                          wait=lambda p: in_copy(p, slot, i).wait())
 
     if n_tiles > 2:                      # drain the DMA issued 2 tiles ago
         @pl.when(i >= 2)                 # before reusing its slot
@@ -281,7 +309,7 @@ def _composite_kernel(*refs, spec, bb: int, n_tiles: int, ft: int):
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "bb", "ft", "interpret"))
-def composite_forward(image, frames, *, spec, bb: int = 8, ft: int = 0,
+def composite_forward(image, frames, *, spec, bb: int = 8, ft=0,
                       interpret: bool = False):
     """Multi-program packed inference in a single resident ``pallas_call``.
 
@@ -295,10 +323,18 @@ def composite_forward(image, frames, *, spec, bb: int = 8, ft: int = 0,
             (padding frames compute garbage that is trimmed on return).
     spec:   static tuple of member stage specs (see module header).
     bb:     frame-tile size (the double-buffered streaming granule).
-    ft:     conv f-tile size; 0 = all F per chunk.
+    ft:     conv f-tile size; 0 = all F per chunk.  A tuple carries one
+            f-tile per *member group* (``member_groups(spec)`` order) —
+            groups with different sub-array widths tune separately.
     Returns a tuple of (B_m, classes_m) int32 logits, one per member.
     """
     assert len(frames) == len(spec), (len(frames), len(spec))
+    if isinstance(ft, tuple):
+        n_groups = len(_member_groups(spec))
+        if len(ft) != n_groups:
+            raise ValueError(
+                f"per-group ft {ft} carries {len(ft)} entries for "
+                f"{n_groups} member groups")
     bs = [f.shape[0] for f in frames]
     bmax = max(bs)
     bb = max(1, min(bb, bmax))

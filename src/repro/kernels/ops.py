@@ -78,20 +78,28 @@ def megakernel_forward(image, frames: jax.Array, *, spec, bb: int = 8,
                                   interpret=interpret)
 
 
-def composite_forward(image, frames, *, spec, bb: int = 8, ft: int = 0,
+def composite_forward(image, frames, *, spec, bb: int = 8, ft=0,
                       interpret: bool | None = None):
     """Shared-array multi-program inference: one ``pallas_call`` runs
     every member of a composite (programs whose S-modes tile the array
     exactly) on its own frame stream against the composite weight image.
 
     ``frames`` is a tuple of per-member (B, H, W, Cin) batches; returns a
-    tuple of per-member (B, classes) int32 logits.  See
-    ``interpreter.pack_programs`` for building ``image``/``spec``.
+    tuple of per-member (B, classes) int32 logits.  ``ft`` may be a
+    tuple with one f-tile per member group (``member_groups`` order).
+    See ``interpreter.pack_programs`` for building ``image``/``spec``.
     """
     if interpret is None:
         interpret = default_interpret()
     return _mk.composite_forward(image, tuple(frames), spec=spec, bb=bb,
                                  ft=ft, interpret=interpret)
+
+
+def member_groups(spec):
+    """A composite spec's sub-array groups (members with shape-identical
+    IO+conv chains stack into one fused conv); per-group ``ft`` tuples
+    index groups in this order."""
+    return _mk.member_groups(spec)
 
 
 def binary_linear(x: jax.Array, w_signs: jax.Array, *,

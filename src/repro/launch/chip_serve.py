@@ -19,6 +19,24 @@ device, frames scattered on the batch axis); on a 1-device host it
 degrades to the plain jit path, and under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` it exercises the
 real N-way scatter on CPU.
+
+Two runtime modes on top of plain static serving:
+
+* ``--policy operating-point`` serves program *families* — names in
+  ``--programs`` may be family names from ``networks.FAMILIES`` (e.g.
+  ``cifar10``), whose member variants are all compiled and served behind
+  one lane by the energy-accuracy controller; ``--budget-uj-s`` caps the
+  chip-model average power (uJ of I2L energy per second of chip time)
+  and a tight budget forces visible downshifts::
+
+      PYTHONPATH=src python -m repro.launch.chip_serve \
+          --policy operating-point --programs cifar10 --budget-uj-s 400
+
+* ``--cascade`` runs the paper's always-on hierarchy: the 0.92 uJ/f S=4
+  face detector screens every frame and only logit-margin positives
+  (``--margin``) escalate to the 14.4 uJ/f S=1 owner recognizer::
+
+      PYTHONPATH=src python -m repro.launch.chip_serve --cascade
 """
 
 from __future__ import annotations
@@ -28,9 +46,9 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core.chip import interpreter, networks
+from repro.core.chip import energy, interpreter, networks
 from repro.distributed import sharding
-from repro.serving import ChipServer
+from repro.serving import CascadePipeline, ChipServer
 
 
 def build_artifact(program, seed: int, warm_bn: bool):
@@ -87,17 +105,50 @@ def main(argv=None):
                          "for each resident program on this backend "
                          "before serving (persisted in the autotune "
                          "cache, see kernels/autotune.py)")
+    ap.add_argument("--policy", choices=("static", "operating-point"),
+                    default="static",
+                    help="dispatch policy: 'static' serves each lane "
+                         "with its own program; 'operating-point' serves "
+                         "program families (names in --programs may be "
+                         "networks.FAMILIES entries) at the energy-"
+                         "accuracy point the budget and backlog call for")
+    ap.add_argument("--budget-uj-s", type=float, default=None,
+                    help="operating-point controller energy budget: max "
+                         "chip-model average power in uJ/s (uW); tight "
+                         "budgets force downshifts to cheaper variants")
+    ap.add_argument("--cascade", action="store_true",
+                    help="run the always-on cascade demo: the S=4 face "
+                         "detector screens every frame, logit-margin "
+                         "positives escalate to the S=1 owner recognizer")
+    ap.add_argument("--margin", type=float, default=0.0,
+                    help="cascade escalation threshold on the detector's "
+                         "logit margin")
     ap.add_argument("--no-warm-bn", action="store_true",
                     help="skip the one-batch BN warm (faster, cruder "
                          "thresholds)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.cascade:
+        return run_cascade(args)
+
     names = [n.strip() for n in args.programs.split(",") if n.strip()]
+    families = {}
+    if args.policy == "operating-point":
+        # family names expand to their member variants behind one lane
+        expanded = []
+        for n in names:
+            if n in networks.FAMILIES:
+                families[n] = networks.FAMILIES[n]
+                expanded.extend(networks.FAMILIES[n])
+            else:
+                expanded.append(n)
+        names = expanded
     unknown = [n for n in names if n not in networks.REGISTRY]
     if unknown:
         ap.error(f"unknown programs {unknown}; have "
-                 f"{sorted(networks.REGISTRY)}")
+                 f"{sorted(networks.REGISTRY)} and families "
+                 f"{sorted(networks.FAMILIES)}")
 
     programs = {n: networks.REGISTRY[n]() for n in names}
     print(f"folding deployment artifacts for {names} ...")
@@ -142,42 +193,69 @@ def main(argv=None):
     server = ChipServer(programs, artifacts, batch=args.batch, mesh=mesh,
                         donate_frames=args.donate,
                         megakernel=args.megakernel, prefetch=prefetch,
-                        shared=args.shared)
+                        shared=args.shared, policy=args.policy,
+                        families=families or None,
+                        budget_uj_s=args.budget_uj_s)
     print(f"resident programs: {names}  (batch={args.batch}, "
           f"devices={ndev}, S-modes={[programs[n].s for n in names]}, "
           f"megakernel={args.megakernel}, prefetch={prefetch}, "
-          f"shared={args.shared})")
+          f"shared={args.shared}, policy={args.policy})")
+    if families:
+        for fam, members in families.items():
+            pts = energy.operating_points(
+                {m: programs[m] for m in members}, networks.ACCURACY)
+            print(f"family {fam}: " + " > ".join(
+                f"{p.name}[{p.uj_per_frame:.2f}uJ/f @{p.accuracy:.1%}]"
+                for p in pts)
+                + (f"  (budget {args.budget_uj_s:,.0f} uJ/s)"
+                   if args.budget_uj_s else "  (no budget)"))
     if args.shared:
         groups = server.shared_groups
         print("shared-array groups: "
               + (", ".join("+".join(g) for g in groups)
                  if groups else "none (S-modes do not tile the array)"))
 
-    # interleaved synthetic streams: round-robin submission across programs
-    per = {n: frame_stream(programs[n], -(-args.requests // len(names)),
-                           args.seed + 100 + i)
-           for i, n in enumerate(names)}
-    idx = {n: 0 for n in names}
+    # interleaved synthetic streams: round-robin submission across lanes
+    lanes = list(server.queue.lanes)
+    geom_prog = {lane: programs[server.families.get(lane, (lane,))[0]]
+                 for lane in lanes}
+    per = {lane: frame_stream(geom_prog[lane],
+                              -(-args.requests // len(lanes)),
+                              args.seed + 100 + i)
+           for i, lane in enumerate(lanes)}
+    idx = {lane: 0 for lane in lanes}
     submitted = 0
     while submitted < args.requests:
-        n = names[submitted % len(names)]
-        server.submit(n, per[n][idx[n]])
-        idx[n] += 1
+        lane = lanes[submitted % len(lanes)]
+        server.submit(lane, per[lane][idx[lane]])
+        idx[lane] += 1
         submitted += 1
 
     results = server.drain()
     stats = server.stats()
 
-    counts = {n: 0 for n in names}
+    counts = {lane: 0 for lane in lanes}
     for r in results:
         counts[r.program] += 1
     print(f"\nserved {len(results)} frames in {stats.dispatches} dispatches "
           f"({stats.host_wall_s*1e3:.0f} ms host)")
-    for n in names:
-        rep = stats.chip.reports[n]
-        print(f"  {n:>14}: {counts[n]:3d} served, {stats.padded[n]} padded "
-              f"slots, {rep.i2l_energy_per_inference*1e6:.2f} uJ/frame, "
-              f"S={programs[n].s}")
+    for lane in lanes:
+        members = server.families.get(lane, (lane,))
+        uj = [stats.chip.reports[m].i2l_energy_per_inference * 1e6
+              for m in members]
+        print(f"  {lane:>14}: {counts[lane]:3d} served, "
+              f"{stats.padded[lane]} padded slots, "
+              + (f"{uj[0]:.2f} uJ/frame, S={programs[lane].s}"
+                 if len(members) == 1 else
+                 f"{min(uj):.2f}-{max(uj):.2f} uJ/frame across "
+                 f"{len(members)} operating points"))
+    if stats.policy == "operating-point":
+        vd = {v: n for v, n in stats.variant_dispatches.items() if n}
+        print(f"operating points    : {vd} "
+              f"(downshift ratio {stats.downshift_ratio:.2f}, "
+              f"energy {stats.energy_uj:,.0f} uJ"
+              + (f" under budget {stats.budget_uj_s:,.0f} uJ/s)"
+                 if stats.budget_uj_s else ", no budget)"))
     print(f"host-sim throughput : {stats.host_frames_per_s:,.0f} frames/s")
     print(f"array utilization   : {stats.array_utilization:.2f} mean "
           f"occupied fraction over {stats.dispatches} dispatches "
@@ -187,6 +265,40 @@ def main(argv=None):
           f"{stats.chip.power_w*1e3:.2f} mW avg "
           f"(paper: up to 1700 f/s, 0.9 mW I2L at S=4)")
     return results, stats
+
+
+def run_cascade(args):
+    """The paper's always-on hierarchy: S=4 face detector on every frame,
+    logit-margin positives escalate to the S=1 owner recognizer."""
+    det_name, rec_name = "face_detector", "owner_detector"
+    programs = {det_name: networks.face_detector(),
+                rec_name: networks.owner_detector()}
+    print(f"folding deployment artifacts for cascade "
+          f"{det_name} -> {rec_name} ...")
+    artifacts = {n: build_artifact(p, args.seed + i, not args.no_warm_bn)
+                 for i, (n, p) in enumerate(programs.items())}
+    prefetch = (args.prefetch_depth if args.prefetch_depth is not None
+                else int(args.prefetch))
+    server = ChipServer(programs, artifacts, batch=args.batch,
+                        megakernel=args.megakernel, prefetch=prefetch)
+    casc = CascadePipeline(server, det_name, rec_name,
+                           positive_class=1, margin=args.margin)
+    frames = frame_stream(programs[det_name], args.requests, args.seed + 100)
+    casc.submit_many(frames)
+    results = casc.drain()
+    rep = casc.report()
+    stats = server.stats()
+    print(f"\ncascade served {len(results)} frames "
+          f"({rep.escalated} escalated, rate {rep.escalation_rate:.2f}, "
+          f"margin >= {args.margin})")
+    print(f"detector stage      : {rep.detector_uj:.2f} uJ/frame x "
+          f"{rep.frames} frames (+{stats.padded[det_name]} padded)")
+    print(f"recognizer stage    : {rep.recognizer_uj:.2f} uJ/frame x "
+          f"{rep.escalated} frames (+{stats.padded[rec_name]} padded)")
+    print(f"cascade bill        : {rep.uj_per_frame:.2f} uJ/frame vs "
+          f"{rep.uj_per_frame_recognizer_only:.2f} recognizer-on-every-"
+          f"frame ({rep.savings:.2f}x saved; paper: 0.92 -> 14.4 uJ/f)")
+    return results, rep
 
 
 if __name__ == "__main__":

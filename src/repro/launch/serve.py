@@ -5,6 +5,13 @@ request; prefill fills a slot's cache, decode advances every live slot
 one token per step, finished slots are refilled from the queue (standard
 static batching — the chip-tier analogue is the always-on detector
 example's window stream).
+
+The request queue is the chip-tier scheduler's
+:class:`repro.serving.queue.FrameQueue` — both serving stacks (the
+BinarEye frame service and this LM batcher) now share one queue
+mechanism: requests enqueue on a lane, ``next_batch`` pulls up to a
+static batch in FIFO order, and a multi-model deployment gets the same
+round-robin fairness contract the chip server property-tests.
 """
 
 from __future__ import annotations
@@ -18,6 +25,7 @@ import jax.numpy as jnp
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.data import tokens as dtok
 from repro.models import transformer
+from repro.serving.queue import FrameQueue, FrameRequest
 from repro.train import serve, steps
 
 
@@ -43,18 +51,33 @@ def main(argv=None):
     prefill = jax.jit(serve.build_prefill_step(cfg, max_len=max_len))
     decode = jax.jit(serve.build_decode_step(cfg))
 
-    # request queue: deterministic synthetic prompts
-    def prompt(rid):
-        b = dtok.batch_for_step(cfg, rid, global_batch=1,
-                                seq_len=args.prompt_len)
-        return b["tokens"]
+    # the shared scheduler: one lane per served model (a single lane
+    # here; a multi-arch deployment adds lanes and inherits round-robin
+    # fairness), deterministic synthetic prompts as the request payload.
+    # Requests are admitted lazily, a batch ahead of the serve loop, so
+    # a long stream never materializes every prompt up front.
+    queue = FrameQueue([args.arch])
+    next_rid = 0
+
+    def admit():
+        nonlocal next_rid
+        while next_rid < args.requests and queue.pending() < args.batch:
+            prompt = dtok.batch_for_step(cfg, next_rid, global_batch=1,
+                                         seq_len=args.prompt_len)["tokens"]
+            queue.submit(FrameRequest(rid=next_rid, program=args.arch,
+                                      frame=prompt))
+            next_rid += 1
 
     served = 0
     t0 = time.time()
     key = jax.random.PRNGKey(42)
-    while served < args.requests:
-        n = min(args.batch, args.requests - served)
-        toks = jnp.concatenate([prompt(served + i) for i in range(n)])
+    while True:
+        admit()
+        pulled = queue.next_batch(args.batch)
+        if pulled is None:
+            break
+        _, reqs = pulled
+        toks = jnp.concatenate([r.frame for r in reqs])
         pos = jnp.broadcast_to(jnp.arange(args.prompt_len)[None], toks.shape[:2])
         logits, cache = prefill(params, {"tokens": toks, "positions": pos})
         cur = serve.sample(key, logits, args.temperature)
@@ -66,10 +89,10 @@ def main(argv=None):
             cur = serve.sample(sk, logits, args.temperature)
             outs.append(cur)
         gen = jnp.concatenate(outs, axis=1)
-        for i in range(n):
+        for i, r in enumerate(reqs):
             ids = gen[i].reshape(-1)[: args.gen_len]
-            print(f"req {served + i}: {[int(x) for x in ids][:12]}...")
-        served += n
+            print(f"req {r.rid}: {[int(x) for x in ids][:12]}...")
+        served += len(reqs)
     dt = time.time() - t0
     print(f"\n{served} requests, {served * args.gen_len} tokens in {dt:.1f}s "
           f"({served * args.gen_len / dt:.1f} tok/s host-sim)")

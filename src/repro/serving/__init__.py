@@ -1,13 +1,28 @@
 """Chip-tier serving: multi-program static-batch execution of InferencePlans.
 
-See :mod:`repro.serving.scheduler` for the S-mode batching model and
-``docs/serving.md`` for the chip analogy.
+Mechanism/policy split (see :mod:`repro.serving.server` for the model and
+``docs/serving.md`` for the chip analogy):
+
+* queue    — per-lane FIFOs + round-robin pointer (:mod:`.queue`)
+* policy   — static or operating-point dispatch (:mod:`.policy`)
+* executor — pad/dispatch/finish + prefetch pipeline (:mod:`.executor`)
+* server   — the thin ``ChipServer`` composition (:mod:`.server`)
+* cascade  — detector -> recognizer always-on pipelines (:mod:`.cascade`)
 """
 
-from repro.serving.scheduler import (  # noqa: F401
-    ChipServer,
+from repro.serving.cascade import CascadePipeline, CascadeResult  # noqa: F401
+from repro.serving.policy import (  # noqa: F401
+    Dispatch,
+    DispatchPolicy,
+    LaneDispatch,
+    OperatingPointPolicy,
+    PolicyContext,
+    StaticPolicy,
+)
+from repro.serving.queue import (  # noqa: F401
     FrameQueue,
     FrameRequest,
     FrameResult,
-    ServeStats,
+    plan_shared_groups,
 )
+from repro.serving.server import ChipServer, ServeStats  # noqa: F401

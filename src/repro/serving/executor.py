@@ -1,0 +1,247 @@
+"""Dispatch executor: the mechanism that runs a policy's decisions.
+
+This module owns everything between a :class:`~repro.serving.policy.
+Dispatch` decision and host-side results — no scheduling choices live
+here:
+
+* **launch** — pad each member lane's pull to the static batch (the
+  always-on pipeline never idles; short lanes pad with the last real
+  frame, empty lanes with zeros), scatter over the serving mesh if one
+  is bound, and run the member's jit'd serve function.  A multi-lane
+  dispatch runs as ONE shared-array composite ``pallas_call``
+  (``interpreter.pack_programs``): composites are compiled lazily per
+  ordered variant tuple and cached, so both admission-time groups
+  (static policy) and per-dispatch tilings (operating-point controller
+  downshifts) hit the same compile cache.
+* **materialize / finish** — sync a dispatch's device arrays to host
+  numpy and unpack them into per-request :class:`FrameResult`s.
+* **depth-k prefetch pipeline** — :meth:`step` keeps up to ``prefetch``
+  dispatches in flight before blocking on the oldest one, with finished
+  results fetched to host memory by a background thread; the policy is
+  still consulted in exactly the synchronous order, so pipelining never
+  changes the schedule (property-tested).
+"""
+
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chip import interpreter, isa
+from repro.distributed import sharding
+from repro.serving.policy import Dispatch
+from repro.serving.queue import FrameRequest, FrameResult
+
+
+class Executor:
+    """Launch/materialize/finish + the prefetch pipeline for one server.
+
+    ``programs``/``artifacts`` are keyed by resident *variant* name (for
+    a static server that is just the lane name).  ``artifacts`` holds the
+    raw admission-time artifacts (any form); per-variant device operands
+    and jit'd serve functions are built here.
+    """
+
+    def __init__(self, programs: Mapping[str, isa.Program],
+                 artifacts: Mapping[str, Any], *, batch: int,
+                 mesh=None, donate_frames: bool = False,
+                 interpret: Optional[bool] = None,
+                 megakernel: bool = False, prefetch: int = 0):
+        self.batch = batch
+        self.mesh = mesh
+        self.prefetch = prefetch
+        self._donate = donate_frames
+        self._interpret = interpret
+        self._megakernel = megakernel
+        self.programs: Dict[str, isa.Program] = dict(programs)
+        self._raw_artifacts: Dict[str, Any] = dict(artifacts)
+        self.plans: Dict[str, interpreter.InferencePlan] = {}
+        self.artifacts: Dict[str, Any] = {}
+        self._fns: Dict[str, Any] = {}
+        self._geom: Dict[str, Tuple[int, int, int]] = {}
+        for name, prog in self.programs.items():
+            isa.validate(prog)
+            plan = interpreter.compile_plan(prog)
+            if megakernel:
+                art = interpreter.ensure_image(artifacts[name], prog)
+            else:
+                art = interpreter.ensure_packed(artifacts[name])
+            if mesh is not None:
+                art = sharding.replicate_artifact(mesh, art)
+            io = prog.instrs[0]
+            self.plans[name] = plan
+            self.artifacts[name] = art
+            self._geom[name] = (io.height, io.width, io.in_channels)
+            self._fns[name] = plan.make_serve_fn(
+                mesh=mesh, donate_frames=donate_frames, interpret=interpret,
+                megakernel=megakernel)
+        self._composites: Dict[Tuple[str, ...], Dict[str, Any]] = {}
+        self._inflight: collections.deque = collections.deque()
+        self._fetch_pool: Optional[concurrent.futures.ThreadPoolExecutor] = (
+            concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="serve-fetch")
+            if self.prefetch else None)
+
+    def geometry(self, variant: str) -> Tuple[int, int, int]:
+        return self._geom[variant]
+
+    # -- composite compilation ---------------------------------------------
+
+    def composite_for(self, variants: Tuple[str, ...]) -> Dict[str, Any]:
+        """The compiled shared-array composite for an ordered variant
+        tuple (lazy; cached — admission-time groups and on-the-fly
+        controller tilings share the cache)."""
+        comp = self._composites.get(variants)
+        if comp is None:
+            cplan, cimage = interpreter.pack_programs(
+                {v: self.programs[v] for v in variants},
+                {v: self._raw_artifacts[v] for v in variants})
+            if self.mesh is not None:
+                cimage = sharding.replicate_artifact(self.mesh, cimage)
+            cfn = cplan.make_serve_fn(mesh=self.mesh,
+                                      donate_frames=self._donate,
+                                      interpret=self._interpret)
+            comp = dict(plan=cplan, image=cimage, fn=cfn)
+            self._composites[variants] = comp
+        return comp
+
+    def warm_composites(self, groups) -> None:
+        """Precompile composites for admission-time groups (static
+        shared serving compiles its groups up front, like the chip
+        loading every resident program's weights before serving)."""
+        for members in groups:
+            self.composite_for(tuple(members))
+
+    @property
+    def compiled_composites(self) -> Tuple[Tuple[str, ...], ...]:
+        return tuple(self._composites)
+
+    # -- launch / materialize / finish --------------------------------------
+
+    def pad_frames(self, reqs: List[FrameRequest],
+                   geom: Tuple[int, int, int]):
+        """Stack a lane's pull into a full static batch (the always-on
+        pipeline doesn't idle: short lanes pad with the last real frame,
+        empty lanes with zeros; the burned slots are billed)."""
+        if reqs:
+            frames = np.stack([r.frame for r in reqs])
+            if len(reqs) < self.batch:
+                pad = np.broadcast_to(
+                    frames[-1], (self.batch - len(reqs),) + frames.shape[1:])
+                frames = np.concatenate([frames, pad])
+        else:
+            frames = np.zeros((self.batch,) + geom, dtype=np.int32)
+        return frames
+
+    def launch(self, dispatch: Dispatch, index: int) -> Dict[str, Any]:
+        """Run one policy decision on the device; returns the in-flight
+        handle (device arrays, not yet synced)."""
+        if dispatch.composite:
+            variants = tuple(ld.variant for ld in dispatch.lanes)
+            comp = self.composite_for(variants)
+            frames = []
+            for ld in dispatch.lanes:
+                f = jnp.asarray(self.pad_frames(list(ld.requests),
+                                                self._geom[ld.variant]))
+                if self.mesh is not None:
+                    f = sharding.scatter_frames(self.mesh, f)
+                frames.append(f)
+            logits, labels = comp["fn"](comp["image"], tuple(frames))
+            return dict(dispatch=dispatch, index=index, logits=logits,
+                        labels=labels)
+        ld, = dispatch.lanes
+        frames = jnp.asarray(self.pad_frames(list(ld.requests),
+                                             self._geom[ld.variant]))
+        if self.mesh is not None:
+            frames = sharding.scatter_frames(self.mesh, frames)
+        logits, labels = self._fns[ld.variant](self.artifacts[ld.variant],
+                                               frames)
+        return dict(dispatch=dispatch, index=index, logits=logits,
+                    labels=labels)
+
+    @staticmethod
+    def materialize(handle: Dict[str, Any]):
+        """Sync an in-flight dispatch's device arrays to host numpy (runs
+        on the fetch thread when prefetching)."""
+        if handle["dispatch"].composite:
+            labels = tuple(np.asarray(jax.block_until_ready(l))
+                           for l in handle["labels"])
+            logits = tuple(np.asarray(l) for l in handle["logits"])
+        else:
+            labels = np.asarray(jax.block_until_ready(handle["labels"]))
+            logits = np.asarray(handle["logits"])
+        return logits, labels
+
+    def finish(self, handle: Dict[str, Any]) -> List[FrameResult]:
+        """Block on an in-flight dispatch and materialize its results."""
+        if "future" in handle:
+            logits, labels = handle["future"].result()
+        else:
+            logits, labels = self.materialize(handle)
+        dispatch: Dispatch = handle["dispatch"]
+        if dispatch.composite:
+            out = []
+            for mi, ld in enumerate(dispatch.lanes):
+                out.extend(
+                    FrameResult(rid=r.rid, program=ld.lane,
+                                label=int(labels[mi][i]),
+                                logits=logits[mi][i],
+                                dispatch=handle["index"],
+                                variant=ld.variant)
+                    for i, r in enumerate(ld.requests))
+            return out
+        ld, = dispatch.lanes
+        return [FrameResult(rid=r.rid, program=ld.lane, label=int(labels[i]),
+                            logits=logits[i], dispatch=handle["index"],
+                            variant=ld.variant)
+                for i, r in enumerate(ld.requests)]
+
+    # -- the prefetch pipeline ----------------------------------------------
+
+    def _fill(self, launch_fn: Callable[[], Optional[Dict[str, Any]]]) -> None:
+        """Launch dispatches until ``prefetch`` are in flight (or the
+        queue drains), handing each to the background fetch thread."""
+        while len(self._inflight) < self.prefetch:
+            handle = launch_fn()
+            if handle is None:
+                return
+            if self._fetch_pool is not None:
+                handle["future"] = self._fetch_pool.submit(
+                    self.materialize, handle)
+            self._inflight.append(handle)
+
+    def step(self, launch_fn: Callable[[], Optional[Dict[str, Any]]]
+             ) -> List[FrameResult]:
+        """One dispatch through the pipeline: synchronous when
+        ``prefetch == 0``, else keep the pipeline filled and block only
+        on the oldest in-flight dispatch."""
+        if not self.prefetch:
+            cur = launch_fn()
+            return [] if cur is None else self.finish(cur)
+        self._fill(launch_fn)
+        if not self._inflight:
+            return []
+        cur = self._inflight.popleft()
+        self._fill(launch_fn)                  # stage N+1.. while N runs
+        return self.finish(cur)
+
+    def close(self) -> None:
+        """Release the background fetch thread, syncing (and discarding)
+        any in-flight dispatches; safe to call more than once."""
+        while self._inflight:
+            self.finish(self._inflight.popleft())
+        if self._fetch_pool is not None:
+            self._fetch_pool.shutdown(wait=True)
+            self._fetch_pool = None
+
+    def __del__(self):  # pragma: no cover - interpreter-exit ordering
+        try:
+            if getattr(self, "_fetch_pool", None) is not None:
+                self._fetch_pool.shutdown(wait=False)
+        except Exception:
+            pass

@@ -1,0 +1,266 @@
+"""Dispatch policies: *what to run next* on the serving mechanism.
+
+BinarEye's headline is not peak efficiency but *scalability*: one chip
+trades 14.4 uJ/f at 86% CIFAR-10 accuracy down to 0.92 uJ/f at 94%
+face-detect precision "depending on the task's requirements" (paper
+Fig. 5 / Table 1).  The mechanism layer (``queue``/``executor``) can run
+any of those operating points; this module owns the *choice*:
+
+* :class:`DispatchPolicy` — the interface: given the queue, return the
+  next :class:`Dispatch` (which lane(s), which resident program variant
+  per lane, which frames).  The mechanism guarantees whatever the policy
+  selects is executed and billed; the policy guarantees fairness (it must
+  serve the round-robin head lane and advance the pointer past it —
+  extra lanes may ride along, which only ever serves them *sooner*).
+* :class:`StaticPolicy` — the one-member case of the interface: every
+  lane is served by its own program, shared-array groups (PR 4) dispatch
+  as composites when >= 2 members are backlogged.  This is bit-identical
+  to the pre-policy scheduler.
+* :class:`OperatingPointPolicy` — the paper's energy-accuracy controller:
+  lanes are program *families* (one task compiled at several operating
+  points, e.g. cifar9 at S=1/S=2/S=4/truncated depth — see
+  ``networks.FAMILIES``), and the controller picks the served variant per
+  dispatch from an energy budget (uJ/s of chip time, i.e. an average
+  power envelope in µW) and the lane's backlog.  Downshifting a family
+  frees sub-array lanes, which the policy exploits by co-dispatching
+  other backlogged lanes whose chosen variants tile the array exactly
+  (PR 4's composite packing, formed per dispatch instead of at
+  admission).
+
+Budget semantics (property-tested in tests/test_policy.py): the
+controller accounts every dispatch's chip-model energy and time at
+*selection* (energy is committed the moment the batch hits the array)
+and picks the most accurate variant whose inclusion keeps the average
+power ``spent_uj / chip_time_s`` at or under ``budget_uj_s``.  When no
+variant fits it pins to the cheapest (the always-on pipeline cannot
+idle; the chip has a 0.92 uJ/f floor too), so for any feasible budget
+(>= the cheapest variant's power) the spend never exceeds the budget
+allowance by more than one dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+from repro.core.chip import energy, isa
+from repro.serving.queue import FrameQueue, FrameRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneDispatch:
+    """One lane's share of a dispatch: the frames pulled from ``lane``
+    and the resident program ``variant`` that will run them.  For static
+    lanes ``variant == lane``; an empty ``requests`` tuple means the lane
+    rides a composite as pure padding (its sub-array burns the batch)."""
+    lane: str
+    variant: str
+    requests: Tuple[FrameRequest, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dispatch:
+    """A policy decision: one static batch per member lane, executed as
+    one array pass (solo for a single lane, a shared-array composite for
+    several)."""
+    lanes: Tuple[LaneDispatch, ...]
+
+    @property
+    def composite(self) -> bool:
+        return len(self.lanes) > 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyContext:
+    """Everything a policy may consult, bound once by the server."""
+    batch: int                                  # static dispatch size
+    lanes: Tuple[str, ...]                      # queue lanes (RR order)
+    variants: Dict[str, Tuple[str, ...]]        # lane -> its variants
+    programs: Dict[str, isa.Program]            # variant -> ISA program
+    reports: Dict[str, energy.NetReport]        # variant -> chip model
+    groups: Dict[str, Tuple[str, ...]]          # lane -> shared group
+
+
+class DispatchPolicy:
+    """Base policy: subclasses implement :meth:`select`.
+
+    ``bind`` is called once by the server before serving starts;
+    ``variant_dispatches`` is read back into ``ServeStats`` so callers
+    can see which operating points actually ran.
+    """
+
+    name = "policy"
+
+    def __init__(self) -> None:
+        self.ctx: Optional[PolicyContext] = None
+        self.variant_dispatches: Dict[str, int] = {}
+
+    def bind(self, ctx: PolicyContext) -> None:
+        self.ctx = ctx
+        self.variant_dispatches = {v: 0 for v in ctx.programs}
+        self._bound()
+
+    def _bound(self) -> None:       # subclass hook
+        pass
+
+    def select(self, queue: FrameQueue) -> Optional[Dispatch]:
+        raise NotImplementedError
+
+    def _count(self, dispatch: Dispatch) -> Dispatch:
+        for ld in dispatch.lanes:
+            self.variant_dispatches[ld.variant] = (
+                self.variant_dispatches.get(ld.variant, 0) + 1)
+        return dispatch
+
+    def variant_order(self, lane: str) -> Tuple[str, ...]:
+        """The lane's variants, best operating point first — the order
+        ``downshift_ratio`` measures against.  The base policy uses the
+        registered declaration order; subclasses that re-rank (the
+        operating-point controller sorts energy-descending) override."""
+        return self.ctx.variants[lane]
+
+    def downshift_ratio(self) -> float:
+        """Over multi-variant (family) lanes: the fraction of dispatches
+        served below the lane's top operating point."""
+        if self.ctx is None:
+            return 0.0
+        total = below = 0
+        for lane in self.ctx.lanes:
+            order = self.variant_order(lane)
+            if len(order) < 2:
+                continue
+            total += sum(self.variant_dispatches.get(v, 0) for v in order)
+            below += sum(self.variant_dispatches.get(v, 0)
+                         for v in order[1:])
+        return below / total if total else 0.0
+
+
+class StaticPolicy(DispatchPolicy):
+    """Serve every lane with its own program; shared-array groups
+    dispatch as composites when >= 2 members are backlogged (including
+    idle members, whose sub-arrays burn their batch — the always-on
+    array never idles).  Exactly the pre-policy scheduler."""
+
+    name = "static"
+
+    def select(self, queue: FrameQueue) -> Optional[Dispatch]:
+        pulled = queue.next_batch_shared(self.ctx.batch, self.ctx.groups)
+        if pulled is None:
+            return None
+        if len(pulled) > 1:
+            # composite dispatch: every group member's sub-array runs this
+            # batch — backlogged lanes carry frames, the rest burn padding.
+            members = self.ctx.groups[next(iter(pulled))]
+            lanes = tuple(LaneDispatch(m, m, tuple(pulled.get(m, ())))
+                          for m in members)
+        else:
+            (name, reqs), = pulled.items()
+            lanes = (LaneDispatch(name, name, tuple(reqs)),)
+        return self._count(Dispatch(lanes))
+
+
+class OperatingPointPolicy(DispatchPolicy):
+    """The energy-accuracy operating-point controller (paper Fig. 5).
+
+    Per family lane the variants are held energy-descending (= accuracy
+    descending along the Pareto front, see ``energy.operating_points``);
+    each dispatch picks the most accurate variant affordable under
+    ``budget_uj_s`` and downshifts one extra step when the lane's backlog
+    reaches ``backlog_high`` frames (catching up at a cheaper, faster
+    point).  With ``shared=True`` other backlogged lanes whose chosen
+    variants tile the 256-channel array exactly ride the same dispatch
+    as an on-the-fly composite.
+    """
+
+    name = "operating-point"
+
+    def __init__(self, budget_uj_s: Optional[float] = None,
+                 backlog_high: Optional[int] = None,
+                 shared: bool = False) -> None:
+        super().__init__()
+        if budget_uj_s is not None and budget_uj_s <= 0:
+            raise ValueError(
+                f"budget_uj_s must be positive, got {budget_uj_s}")
+        self.budget_uj_s = budget_uj_s
+        self.backlog_high = backlog_high
+        self.shared = shared
+        self.spent_uj = 0.0             # committed chip-model energy
+        self.chip_time_s = 0.0          # committed chip-model time
+
+    def _bound(self) -> None:
+        ctx = self.ctx
+        # binding attaches the policy to a fresh server: committed totals
+        # reset (a reused instance must not carry another server's spend)
+        self.spent_uj = 0.0
+        self.chip_time_s = 0.0
+        self._backlog_high = (self.backlog_high if self.backlog_high
+                              is not None else 4 * ctx.batch)
+        # variants energy-descending per lane; one full static batch of
+        # variant v costs e[v] uJ and t[v] seconds of chip time
+        self._e = {v: ctx.batch * r.i2l_energy_per_inference * 1e6
+                   for v, r in ctx.reports.items()}
+        self._t = {v: ctx.batch / r.inferences_per_s
+                   for v, r in ctx.reports.items()}
+        self._order = {
+            lane: tuple(sorted(vs, key=lambda v: -self._e[v]))
+            for lane, vs in ctx.variants.items()}
+
+    def variant_order(self, lane: str) -> Tuple[str, ...]:
+        return self._order[lane]
+
+    def _choose(self, lane: str, pending: int,
+                spent: float, time: float) -> str:
+        """Most accurate affordable variant for ``lane``, given committed
+        totals ``(spent, time)``; backlog pressure downshifts one more
+        step; the cheapest variant is the unconditional floor."""
+        order = self._order[lane]
+        idx = len(order) - 1                      # floor: cheapest
+        for i, v in enumerate(order):
+            if self.budget_uj_s is None or (
+                    (spent + self._e[v])
+                    <= self.budget_uj_s * (time + self._t[v])):
+                idx = i
+                break
+        if pending >= self._backlog_high:
+            idx = min(idx + 1, len(order) - 1)    # catch-up downshift
+        return order[idx]
+
+    def select(self, queue: FrameQueue) -> Optional[Dispatch]:
+        lane = queue.first_backlogged()
+        if lane is None:
+            return None
+        queue.advance_past(lane)
+        batch = self.ctx.batch
+        spent, time = self.spent_uj, self.chip_time_s
+
+        head = self._choose(lane, queue.pending(lane), spent, time)
+        picks = [(lane, head)]
+        occ = 1.0 / self.ctx.programs[head].s
+        spent += self._e[head]
+        time += self._t[head]
+
+        if self.shared and occ < 1.0 - 1e-9:
+            # riders: other backlogged lanes whose chosen variants fill
+            # the freed sub-array lanes — commit only on an exact tiling
+            for other in queue.rr_lanes():
+                if other == lane or not queue.pending(other):
+                    continue
+                v = self._choose(other, queue.pending(other), spent, time)
+                w = 1.0 / self.ctx.programs[v].s
+                if occ + w > 1.0 + 1e-9:
+                    continue
+                picks.append((other, v))
+                occ += w
+                spent += self._e[v]
+                time += self._t[v]
+                if occ >= 1.0 - 1e-9:
+                    break
+            if occ < 1.0 - 1e-9 and len(picks) > 1:
+                picks = picks[:1]                 # no exact tiling: solo
+                spent = self.spent_uj + self._e[head]
+                time = self.chip_time_s + self._t[head]
+
+        self.spent_uj, self.chip_time_s = spent, time
+        lanes = tuple(LaneDispatch(l, v, tuple(queue.take(l, batch)))
+                      for l, v in picks)
+        return self._count(Dispatch(lanes))

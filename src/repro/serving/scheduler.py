@@ -1,523 +1,35 @@
-"""Chip-tier serving scheduler: S-mode multi-program static batching.
+"""Back-compat shim: the pre-split serving monolith's import surface.
 
-BinarEye's serving story (paper Sec. IV): frames stream in continuously
-and the chip recombines its 16 sub-arrays across programmable network
-widths S in {1, 2, 4} — several *programs* can stay resident (weights in
-SRAM, instructions in the 16-slot program memory) and the array is
-re-pointed per batch, trading energy for accuracy per task.  This module
-is the TPU analogue of that controller:
+The 500-line scheduler was split into mechanism and policy (see the
+package docstring in :mod:`repro.serving.server`):
 
-* :class:`FrameQueue` — per-program FIFO lanes with a round-robin
-  dispatch pointer.  A dispatch is always single-program (the array runs
-  one instruction stream at a time), fairness comes from rotating the
-  pointer across lanes with pending frames — no resident program starves.
-* :class:`ChipServer` — holds the resident set: per program a compiled
-  :class:`~repro.core.chip.interpreter.InferencePlan`, its packed
-  deployment artifact (the SRAM contents), and a jit'd serve function.
-  Each :meth:`ChipServer.step` pulls one static batch from the queue,
-  pads it to the fixed batch size (the chip's always-on pipeline doesn't
-  idle; padding slots burn energy and are billed), runs the packed
-  pipeline, and returns per-request results.
+* :mod:`repro.serving.queue` — ``FrameQueue`` / ``FrameRequest`` /
+  ``FrameResult`` / ``plan_shared_groups`` (lanes + round-robin pointer
+  + shared grouping);
+* :mod:`repro.serving.policy` — ``DispatchPolicy`` / ``StaticPolicy`` /
+  ``OperatingPointPolicy`` (what to run next);
+* :mod:`repro.serving.executor` — ``Executor`` (pad/dispatch/finish +
+  the depth-k prefetch pipeline);
+* :mod:`repro.serving.server` — ``ChipServer`` / ``ServeStats`` (the
+  thin composition).
 
-Multi-device: pass ``mesh`` (see ``distributed.sharding.serve_mesh``) to
-replicate every program's packed weights per device and scatter the frame
-batch on the batch axis via ``shard_map`` — the LD-once/CONV-many
-schedule lifted to the device level.  Single device degrades to plain jit.
-
-Two further deployment knobs mirror the chip's always-on pipelining:
-
-* ``megakernel=True`` runs each dispatch through the whole-network
-  resident Pallas kernel (``InferencePlan.forward_mega``): the program's
-  full weight image stays VMEM-resident, feature maps never leave VMEM,
-  and frame tiles double-buffer through the kernel grid.
-* ``prefetch=k`` pipelines *submission* to depth k (``True`` = 1): while
-  batch N runs on the device, batches N+1..N+k are already pulled from
-  the queue, padded and dispatched, and finished batches' results are
-  fetched to host memory by a background thread — the host blocks only
-  when a result is consumed before its fetch lands.  The TPU analogue of
-  the chip loading the next image through the IO pads while the array
-  convolves the current one.  Dispatch order (and hence the scheduler's
-  fairness contract) is unchanged: batches are pulled from the
-  ``FrameQueue`` in exactly the same order as the synchronous path.
-* ``shared=True`` enables **true sub-array sharing**: resident programs
-  whose S-modes tile the 256-channel array exactly (4xS4, 2xS2,
-  2xS4+1xS2, ...) are compiled into a :class:`~repro.core.chip.
-  interpreter.CompositePlan` at admission; when two or more of a group's
-  FIFO lanes are backlogged, ONE composite dispatch serves all of them
-  concurrently — the chip's recombined sub-arrays, not time-interleaved
-  whole-array dispatches.  Each member's lane pads (and is billed)
-  independently, per sub-array; a group member whose lane is idle burns
-  its sub-array's slots like any padding (the always-on array never
-  idles).  Results are bit-exact vs solo dispatch, fairness is
-  preserved (serving a backlogged lane early never starves another),
-  and ``stats().array_utilization`` reports the occupancy win.
+Every pre-split name keeps importing from here; new code should import
+from :mod:`repro.serving` (or the specific submodule) directly.
 """
 
-from __future__ import annotations
-
-import collections
-import concurrent.futures
-import dataclasses
-import time
-from typing import Any, Dict, Iterable, List, Mapping, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.chip import energy, interpreter, isa
-from repro.distributed import sharding
-
-
-@dataclasses.dataclass(frozen=True)
-class FrameRequest:
-    """One frame awaiting inference under a resident program."""
-    rid: int                  # server-global request id (arrival order)
-    program: str              # resident program name
-    frame: Any                # (H, W, C) integer image
-
-
-@dataclasses.dataclass(frozen=True)
-class FrameResult:
-    rid: int
-    program: str
-    label: int
-    logits: np.ndarray
-    dispatch: int             # index of the static batch that served it
-
-
-class FrameQueue:
-    """Per-program FIFO lanes + round-robin dispatch across non-empty lanes.
-
-    The solo fairness contract (:meth:`next_batch`, property-tested in
-    tests/test_chip_serve.py): a lane is never dispatched twice while
-    another lane has been waiting non-empty the whole time — the pointer
-    advances past each served lane and only skips lanes that are empty at
-    their turn.  :meth:`next_batch_shared` deliberately relaxes the
-    "never twice" half for lanes *inside a shared-array group* (a
-    composite dispatch serves every backlogged group member each time the
-    pointer hits any of them), but keeps the no-starvation bound every
-    consumer actually relies on: any lane non-empty before a dispatch is
-    itself served within the next ``n_lanes`` dispatches, and no lane is
-    ever served *later* than the solo schedule would have served it.
-    """
-
-    def __init__(self, programs: Iterable[str]):
-        self._order: List[str] = list(programs)
-        if not self._order:
-            raise ValueError("FrameQueue needs at least one resident program")
-        if len(set(self._order)) != len(self._order):
-            raise ValueError(f"duplicate program names: {self._order}")
-        self._lanes: Dict[str, collections.deque] = {
-            name: collections.deque() for name in self._order}
-        self._rr = 0
-
-    def submit(self, req: FrameRequest) -> None:
-        if req.program not in self._lanes:
-            raise KeyError(
-                f"program {req.program!r} not resident "
-                f"(have {self._order})")
-        self._lanes[req.program].append(req)
-
-    def pending(self, program: Optional[str] = None) -> int:
-        if program is not None:
-            return len(self._lanes[program])
-        return sum(len(q) for q in self._lanes.values())
-
-    def __len__(self) -> int:
-        return self.pending()
-
-    def next_batch(self, capacity: int) -> Optional[Tuple[str, List[FrameRequest]]]:
-        """Up to ``capacity`` requests from the next non-empty lane in
-        round-robin order; ``None`` once fully drained."""
-        if capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {capacity}")
-        n = len(self._order)
-        for i in range(n):
-            name = self._order[(self._rr + i) % n]
-            lane = self._lanes[name]
-            if lane:
-                self._rr = (self._rr + i + 1) % n
-                take = [lane.popleft()
-                        for _ in range(min(capacity, len(lane)))]
-                return name, take
-        return None
-
-    def next_batch_shared(self, capacity: int,
-                          groups: Mapping[str, Tuple[str, ...]]
-                          ) -> Optional[Dict[str, List[FrameRequest]]]:
-        """Round-robin like :meth:`next_batch`, but when the selected lane
-        belongs to a shared-array group with >= 2 backlogged members, pull
-        up to ``capacity`` from *every* backlogged member — one composite
-        dispatch serves them all concurrently.  Lanes served early keep
-        their round-robin position (they are simply empty — or shorter —
-        when the pointer reaches them), so the no-starvation contract is
-        untouched: a backlogged lane is only ever served *sooner*.
-        Returns ``{name: requests}`` (single-entry for a solo dispatch),
-        ``None`` once fully drained.
-        """
-        if capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {capacity}")
-        n = len(self._order)
-        for i in range(n):
-            name = self._order[(self._rr + i) % n]
-            if not self._lanes[name]:
-                continue
-            self._rr = (self._rr + i + 1) % n
-            members = groups.get(name, (name,))
-            backlogged = [m for m in members if self._lanes[m]]
-            take_from = backlogged if len(backlogged) >= 2 else [name]
-            out = {}
-            for m in take_from:
-                lane = self._lanes[m]
-                out[m] = [lane.popleft()
-                          for _ in range(min(capacity, len(lane)))]
-            return out
-        return None
-
-
-def plan_shared_groups(programs: Mapping[str, isa.Program]
-                       ) -> Tuple[Tuple[str, ...], ...]:
-    """Partition resident programs into shared-array groups.
-
-    First-fit-decreasing bin packing on sub-array width (256/S channels)
-    into 256-channel bins; only bins that end *exactly* full with >= 2
-    members become composite groups (the chip can only recombine
-    sub-arrays that tile the array), everything else dispatches solo.
-    Deterministic given admission order, so every server replica forms
-    the same groups.
-    """
-    # stable sort: widest sub-arrays (smallest S) first, admission order
-    # preserved within a width class
-    items = sorted(programs.items(), key=lambda kv: kv[1].s)
-    bins: List[Tuple[int, List[str]]] = []    # (free channels, members)
-    for name, prog in items:
-        width = isa.ARRAY_CHANNELS // prog.s
-        for i, (free, members) in enumerate(bins):
-            if width <= free:
-                bins[i] = (free - width, members + [name])
-                break
-        else:
-            bins.append((isa.ARRAY_CHANNELS - width, [name]))
-    return tuple(tuple(members) for free, members in bins
-                 if free == 0 and len(members) >= 2)
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeStats:
-    """Host-side counters + the chip-model bill for what was served."""
-    served: Dict[str, int]            # program -> frames served
-    padded: Dict[str, int]            # program -> padding slots burned
-    dispatches: int
-    host_wall_s: float                # wall time inside dispatches
-    host_frames_per_s: float
-    chip: energy.ServeReport          # µJ/frame, frames/s, power analogue
-    array_utilization: float = 0.0    # mean sum(1/S) of live sub-arrays
-                                      # per dispatch (1.0 = full array)
-    shared_dispatches: int = 0        # dispatches serving >= 2 programs
-
-    @property
-    def total_served(self) -> int:
-        return sum(self.served.values())
-
-
-class ChipServer:
-    """Continuous static-batch serving of compiled ``InferencePlan``s.
-
-    ``programs`` maps resident-program names to validated ISA programs;
-    ``artifacts`` maps the same names to their packed deployment artifacts
-    (``fold_params(..., packed=True)`` — float-folded artifacts are packed
-    on admission).  ``batch`` is the static dispatch size; with a ``mesh``
-    it must divide over the mesh's device count.  ``prefetch`` takes a
-    pipeline depth (``True`` = 1); ``shared=True`` forms shared-array
-    composite groups (see the module docstring).
-    """
-
-    def __init__(self, programs: Mapping[str, isa.Program],
-                 artifacts: Mapping[str, Any], *, batch: int = 8,
-                 mesh=None, donate_frames: bool = False,
-                 interpret: Optional[bool] = None,
-                 megakernel: bool = False, prefetch: bool | int = False,
-                 shared: bool = False,
-                 f_hz: float = energy.F_EMIN):
-        if set(programs) != set(artifacts):
-            raise ValueError(
-                f"programs {sorted(programs)} != artifacts {sorted(artifacts)}")
-        if batch < 1:
-            raise ValueError(f"batch must be >= 1, got {batch}")
-        if int(prefetch) < 0:
-            raise ValueError(f"prefetch depth must be >= 0, got {prefetch}")
-        ndev = mesh.devices.size if mesh is not None else 1
-        if batch % ndev:
-            raise ValueError(
-                f"static batch {batch} must divide over the "
-                f"{ndev}-device serving mesh")
-        self.batch = batch
-        self.mesh = mesh
-        self.f_hz = f_hz
-        self.prefetch = int(prefetch)        # pipeline depth, 0 = sync
-        self.shared = shared
-        self.programs: Dict[str, isa.Program] = dict(programs)
-        self.plans: Dict[str, interpreter.InferencePlan] = {}
-        self.artifacts: Dict[str, Any] = {}
-        self._fns: Dict[str, Any] = {}
-        self._geom: Dict[str, Tuple[int, int, int]] = {}
-        for name, prog in self.programs.items():
-            isa.validate(prog)
-            plan = interpreter.compile_plan(prog)
-            if megakernel:
-                art = interpreter.ensure_image(artifacts[name], prog)
-            else:
-                art = interpreter.ensure_packed(artifacts[name])
-            if mesh is not None:
-                art = sharding.replicate_artifact(mesh, art)
-            io = prog.instrs[0]
-            self.plans[name] = plan
-            self.artifacts[name] = art
-            self._geom[name] = (io.height, io.width, io.in_channels)
-            self._fns[name] = plan.make_serve_fn(
-                mesh=mesh, donate_frames=donate_frames, interpret=interpret,
-                megakernel=megakernel)
-        # shared-array groups: compiled composites over exact tilings
-        self._groups: Dict[str, Tuple[str, ...]] = {}
-        self._composites: Dict[Tuple[str, ...], Dict[str, Any]] = {}
-        if shared:
-            for members in plan_shared_groups(self.programs):
-                cplan, cimage = interpreter.pack_programs(
-                    {m: self.programs[m] for m in members},
-                    {m: artifacts[m] for m in members})
-                if mesh is not None:
-                    cimage = sharding.replicate_artifact(mesh, cimage)
-                cfn = cplan.make_serve_fn(mesh=mesh,
-                                          donate_frames=donate_frames,
-                                          interpret=interpret)
-                self._composites[members] = dict(plan=cplan, image=cimage,
-                                                 fn=cfn)
-                for m in members:
-                    self._groups[m] = members
-        self._inflight: collections.deque = collections.deque()
-        self._fetch_pool: Optional[concurrent.futures.ThreadPoolExecutor] = (
-            concurrent.futures.ThreadPoolExecutor(
-                max_workers=1, thread_name_prefix="serve-fetch")
-            if self.prefetch else None)
-        self.queue = FrameQueue(self.programs)
-        # static per-program chip reports: computed once, reused by stats()
-        self._reports = {n: energy.analyze_net(p, f_hz)
-                         for n, p in self.programs.items()}
-        self._next_rid = 0
-        self._dispatches = 0
-        self._shared_dispatches = 0
-        self._util_sum = 0.0
-        self._served = {name: 0 for name in self.programs}
-        self._padded = {name: 0 for name in self.programs}
-        self._host_wall_s = 0.0
-
-    @property
-    def shared_groups(self) -> Tuple[Tuple[str, ...], ...]:
-        """The compiled shared-array groups (empty unless ``shared=True``
-        and some resident S-modes tile the array exactly)."""
-        return tuple(self._composites)
-
-    # -- request side -------------------------------------------------------
-
-    def submit(self, program: str, frame) -> int:
-        """Enqueue one frame; returns its request id (arrival order)."""
-        if program not in self._geom:
-            raise KeyError(
-                f"program {program!r} not resident "
-                f"(have {sorted(self._geom)})")
-        h, w, c = self._geom[program]
-        frame = np.asarray(frame)
-        if frame.shape != (h, w, c):
-            raise ValueError(
-                f"{program} expects frames of shape {(h, w, c)}, "
-                f"got {frame.shape}")
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.submit(FrameRequest(rid=rid, program=program, frame=frame))
-        return rid
-
-    def submit_many(self, program: str, frames) -> List[int]:
-        return [self.submit(program, f) for f in frames]
-
-    # -- dispatch side ------------------------------------------------------
-
-    def _pad_frames(self, reqs: List[FrameRequest],
-                    geom: Tuple[int, int, int]):
-        """Stack a lane's pull into a full static batch (the always-on
-        pipeline doesn't idle: short lanes pad with the last real frame,
-        empty lanes with zeros; the burned slots are billed)."""
-        if reqs:
-            frames = np.stack([r.frame for r in reqs])
-            if len(reqs) < self.batch:
-                pad = np.broadcast_to(
-                    frames[-1], (self.batch - len(reqs),) + frames.shape[1:])
-                frames = np.concatenate([frames, pad])
-        else:
-            frames = np.zeros((self.batch,) + geom,
-                              dtype=np.int32)
-        return frames
-
-    def _launch(self) -> Optional[Dict[str, Any]]:
-        """Pull + pad + dispatch one static batch — solo or, with
-        ``shared=True`` and >= 2 backlogged lanes of a composite group,
-        one shared-array composite serving every backlogged member.
-        Returns the in-flight handle (device arrays, not yet synced) or
-        ``None`` when drained.  Serving counters are billed at launch —
-        the energy is burned the moment the batch hits the array, synced
-        or not."""
-        # with shared=False the group map is empty, so this degrades to
-        # exactly next_batch's solo pull (one lane per dispatch)
-        pulled = self.queue.next_batch_shared(self.batch, self._groups)
-        if pulled is None:
-            return None
-
-        dispatch = self._dispatches
-        self._dispatches += 1
-        if len(pulled) > 1:
-            # composite dispatch: every group member's sub-array runs this
-            # batch — backlogged lanes carry frames, the rest burn padding.
-            members = self._groups[next(iter(pulled))]
-            comp = self._composites[members]
-            reqs_by = {m: pulled.get(m, []) for m in members}
-            frames = []
-            for m in members:
-                f = jnp.asarray(self._pad_frames(reqs_by[m], self._geom[m]))
-                if self.mesh is not None:
-                    f = sharding.scatter_frames(self.mesh, f)
-                frames.append(f)
-            logits, labels = comp["fn"](comp["image"], tuple(frames))
-            for m in members:
-                self._served[m] += len(reqs_by[m])
-                self._padded[m] += self.batch - len(reqs_by[m])
-            self._shared_dispatches += 1
-            self._util_sum += energy.array_occupancy(
-                [self.programs[m] for m in members if reqs_by[m]])
-            return dict(members=members, reqs=reqs_by, logits=logits,
-                        labels=labels, dispatch=dispatch)
-
-        (name, reqs), = pulled.items()
-        frames = jnp.asarray(self._pad_frames(reqs, self._geom[name]))
-        if self.mesh is not None:
-            frames = sharding.scatter_frames(self.mesh, frames)
-        logits, labels = self._fns[name](self.artifacts[name], frames)
-        self._served[name] += len(reqs)
-        self._padded[name] += self.batch - len(reqs)
-        self._util_sum += 1.0 / self.programs[name].s
-        return dict(name=name, reqs=reqs, logits=logits, labels=labels,
-                    dispatch=dispatch)
-
-    @staticmethod
-    def _materialize(handle: Dict[str, Any]):
-        """Sync an in-flight dispatch's device arrays to host numpy (runs
-        on the fetch thread when prefetching)."""
-        if "members" in handle:
-            labels = tuple(np.asarray(jax.block_until_ready(l))
-                           for l in handle["labels"])
-            logits = tuple(np.asarray(l) for l in handle["logits"])
-        else:
-            labels = np.asarray(jax.block_until_ready(handle["labels"]))
-            logits = np.asarray(handle["logits"])
-        return logits, labels
-
-    def _finish(self, handle: Dict[str, Any]) -> List[FrameResult]:
-        """Block on an in-flight dispatch and materialize its results."""
-        if "future" in handle:
-            logits, labels = handle["future"].result()
-        else:
-            logits, labels = self._materialize(handle)
-        if "members" in handle:
-            out = []
-            for mi, m in enumerate(handle["members"]):
-                out.extend(
-                    FrameResult(rid=r.rid, program=m,
-                                label=int(labels[mi][i]),
-                                logits=logits[mi][i],
-                                dispatch=handle["dispatch"])
-                    for i, r in enumerate(handle["reqs"][m]))
-            return out
-        name, reqs = handle["name"], handle["reqs"]
-        return [FrameResult(rid=r.rid, program=name, label=int(labels[i]),
-                            logits=logits[i], dispatch=handle["dispatch"])
-                for i, r in enumerate(reqs)]
-
-    def _fill_pipeline(self) -> None:
-        """Launch dispatches until ``prefetch`` are in flight (or the
-        queue drains), handing each to the background fetch thread."""
-        while len(self._inflight) < self.prefetch:
-            handle = self._launch()
-            if handle is None:
-                return
-            if self._fetch_pool is not None:
-                handle["future"] = self._fetch_pool.submit(
-                    self._materialize, handle)
-            self._inflight.append(handle)
-
-    def step(self) -> List[FrameResult]:
-        """One dispatch: pull a static batch, run its program(s), return
-        results for the real (non-padding) frames.  [] once drained.
-
-        With ``prefetch=k`` up to k batches are staged and dispatched
-        *before* blocking on the oldest one, and finished results are
-        pulled to the host by a background thread; batches still leave
-        the queue in exactly the synchronous order, so fairness is
-        untouched.
-        """
-        t0 = time.perf_counter()
-        try:
-            if not self.prefetch:
-                cur = self._launch()
-                return [] if cur is None else self._finish(cur)
-            self._fill_pipeline()
-            if not self._inflight:
-                return []
-            cur = self._inflight.popleft()
-            self._fill_pipeline()              # stage N+1.. while N runs
-            return self._finish(cur)
-        finally:
-            self._host_wall_s += time.perf_counter() - t0
-
-    def drain(self) -> List[FrameResult]:
-        """Serve until the queue is empty; results in dispatch order."""
-        out: List[FrameResult] = []
-        while True:
-            got = self.step()
-            if not got:
-                return out
-            out.extend(got)
-
-    def close(self) -> None:
-        """Release the background fetch thread, syncing (and discarding —
-        ``drain()`` first to collect them) any in-flight dispatches.  The
-        server keeps working afterwards with prefetch degraded to
-        synchronous fetch; safe to call more than once."""
-        while self._inflight:
-            self._finish(self._inflight.popleft())
-        if self._fetch_pool is not None:
-            self._fetch_pool.shutdown(wait=True)
-            self._fetch_pool = None
-
-    def __del__(self):  # pragma: no cover - interpreter-exit ordering
-        try:
-            if getattr(self, "_fetch_pool", None) is not None:
-                self._fetch_pool.shutdown(wait=False)
-        except Exception:
-            pass
-
-    # -- accounting ---------------------------------------------------------
-
-    def stats(self) -> ServeStats:
-        chip = energy.serve_report(self.programs, self._served,
-                                   self._padded, f_hz=self.f_hz,
-                                   reports=self._reports)
-        total = sum(self._served.values())
-        fps = total / self._host_wall_s if self._host_wall_s else 0.0
-        util = self._util_sum / self._dispatches if self._dispatches else 0.0
-        return ServeStats(served=dict(self._served),
-                          padded=dict(self._padded),
-                          dispatches=self._dispatches,
-                          host_wall_s=self._host_wall_s,
-                          host_frames_per_s=fps,
-                          chip=chip,
-                          array_utilization=util,
-                          shared_dispatches=self._shared_dispatches)
+from repro.serving.executor import Executor  # noqa: F401
+from repro.serving.policy import (  # noqa: F401
+    Dispatch,
+    DispatchPolicy,
+    LaneDispatch,
+    OperatingPointPolicy,
+    PolicyContext,
+    StaticPolicy,
+)
+from repro.serving.queue import (  # noqa: F401
+    FrameQueue,
+    FrameRequest,
+    FrameResult,
+    plan_shared_groups,
+)
+from repro.serving.server import ChipServer, ServeStats  # noqa: F401

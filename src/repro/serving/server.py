@@ -1,0 +1,335 @@
+"""ChipServer: the thin composition of queue + policy + executor.
+
+BinarEye's serving story (paper Sec. IV): frames stream in continuously
+and the chip recombines its 16 sub-arrays across programmable network
+widths S in {1, 2, 4} — several *programs* can stay resident (weights in
+SRAM, instructions in the 16-slot program memory) and the array is
+re-pointed per batch, trading energy for accuracy per task.  The serving
+package is the TPU analogue of that controller, split mechanism/policy:
+
+* :mod:`repro.serving.queue` — per-lane FIFOs + the round-robin pointer
+  (who is next);
+* :mod:`repro.serving.policy` — which program variant serves the lane:
+  :class:`StaticPolicy` (each lane its own program, shared-array groups
+  composite) or :class:`OperatingPointPolicy` (program families served
+  at the operating point an energy budget and the backlog call for);
+* :mod:`repro.serving.executor` — pad/dispatch/materialize + the depth-k
+  prefetch pipeline;
+* :class:`ChipServer` (this module) — wires them together and keeps the
+  books (served/padded/energy billing via ``energy.serve_report``).
+
+All pre-split behaviour is preserved: ``megakernel=True`` runs dispatches
+through the whole-network resident kernel, ``prefetch=k`` pipelines
+submission to depth k, ``shared=True`` forms shared-array composite
+groups at admission, and a ``mesh`` replicates weights per device while
+frames scatter on the batch axis.  New: ``families=`` registers program
+families (variant sets of one task) behind a single queue lane and
+serves them through the operating-point controller (``policy=`` /
+``budget_uj_s=``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.chip import energy, interpreter, isa
+from repro.serving.executor import Executor
+from repro.serving.policy import (DispatchPolicy, OperatingPointPolicy,
+                                  PolicyContext, StaticPolicy)
+from repro.serving.queue import (FrameQueue, FrameRequest, FrameResult,
+                                 plan_shared_groups)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """Host-side counters + the chip-model bill for what was served."""
+    served: Dict[str, int]            # lane -> frames served
+    padded: Dict[str, int]            # lane -> padding slots burned
+    dispatches: int
+    host_wall_s: float                # wall time inside dispatches
+    host_frames_per_s: float
+    chip: energy.ServeReport          # µJ/frame, frames/s, power analogue
+    array_utilization: float = 0.0    # mean sum(1/S) of live sub-arrays
+                                      # per dispatch (1.0 = full array)
+    shared_dispatches: int = 0        # dispatches serving >= 2 programs
+    policy: str = "static"
+    variant_dispatches: Dict[str, int] = dataclasses.field(
+        default_factory=dict)         # variant -> dispatches it ran
+    energy_uj: float = 0.0            # chip-model energy billed, all lanes
+    budget_uj_s: Optional[float] = None
+    downshift_ratio: float = 0.0      # family dispatches served below the
+                                      # top operating point
+
+    @property
+    def total_served(self) -> int:
+        return sum(self.served.values())
+
+
+class ChipServer:
+    """Continuous static-batch serving of compiled ``InferencePlan``s.
+
+    ``programs`` maps resident-program names to validated ISA programs;
+    ``artifacts`` maps the same names to their packed deployment artifacts
+    (``fold_params(..., packed=True)`` — float-folded artifacts are packed
+    on admission).  ``batch`` is the static dispatch size; with a ``mesh``
+    it must divide over the mesh's device count.  ``prefetch`` takes a
+    pipeline depth (``True`` = 1); ``shared=True`` forms shared-array
+    composite groups at admission.
+
+    ``families`` maps a family (task) name to a sequence of resident
+    program names that are variants of one task — same input geometry and
+    class count, different operating points (see ``networks.FAMILIES``
+    and ``interpreter.compile_family``).  Frames are submitted to the
+    *family* name; the dispatch policy picks the served variant.  With
+    ``families`` the policy defaults to the operating-point controller
+    (``budget_uj_s`` caps the chip-model average power in uJ/s);
+    ``policy`` accepts a :class:`DispatchPolicy` instance or the strings
+    ``"static"`` / ``"operating-point"``.
+    """
+
+    def __init__(self, programs: Mapping[str, isa.Program],
+                 artifacts: Mapping[str, Any], *, batch: int = 8,
+                 mesh=None, donate_frames: bool = False,
+                 interpret: Optional[bool] = None,
+                 megakernel: bool = False, prefetch: bool | int = False,
+                 shared: bool = False,
+                 policy: Optional[DispatchPolicy | str] = None,
+                 families: Optional[Mapping[str, Sequence[str]]] = None,
+                 budget_uj_s: Optional[float] = None,
+                 f_hz: float = energy.F_EMIN):
+        if set(programs) != set(artifacts):
+            raise ValueError(
+                f"programs {sorted(programs)} != artifacts {sorted(artifacts)}")
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        if int(prefetch) < 0:
+            raise ValueError(f"prefetch depth must be >= 0, got {prefetch}")
+        ndev = mesh.devices.size if mesh is not None else 1
+        if batch % ndev:
+            raise ValueError(
+                f"static batch {batch} must divide over the "
+                f"{ndev}-device serving mesh")
+        self.batch = batch
+        self.mesh = mesh
+        self.f_hz = f_hz
+        self.prefetch = int(prefetch)        # pipeline depth, 0 = sync
+        self.shared = shared
+        self.programs: Dict[str, isa.Program] = dict(programs)
+
+        # -- lanes: families collapse their variants behind one lane -------
+        self._families: Dict[str, Tuple[str, ...]] = {}
+        if families:
+            owned = {}
+            for fam, members in families.items():
+                members = tuple(members)
+                if fam in self.programs:
+                    raise ValueError(
+                        f"family name {fam!r} collides with a resident "
+                        "program name")
+                missing = [m for m in members if m not in self.programs]
+                if missing:
+                    raise ValueError(
+                        f"family {fam!r} members {missing} not resident")
+                for m in members:
+                    if m in owned:
+                        raise ValueError(
+                            f"program {m!r} belongs to families "
+                            f"{owned[m]!r} and {fam!r}")
+                    owned[m] = fam
+                # validates shared geometry/classes across the variants
+                interpreter.compile_family(
+                    {m: self.programs[m] for m in members})
+                self._families[fam] = members
+        in_family = {m for ms in self._families.values() for m in ms}
+        self._lanes: Tuple[str, ...] = tuple(self._families) + tuple(
+            n for n in self.programs if n not in in_family)
+        self._lane_variants: Dict[str, Tuple[str, ...]] = {
+            **self._families,
+            **{n: (n,) for n in self.programs if n not in in_family}}
+
+        # -- mechanism ------------------------------------------------------
+        self.executor = Executor(self.programs, artifacts, batch=batch,
+                                 mesh=mesh, donate_frames=donate_frames,
+                                 interpret=interpret, megakernel=megakernel,
+                                 prefetch=self.prefetch)
+        self.plans = self.executor.plans
+        self.artifacts = self.executor.artifacts
+        self.queue = FrameQueue(self._lanes)
+        self._geom = {lane: self.executor.geometry(vs[0])
+                      for lane, vs in self._lane_variants.items()}
+
+        # -- policy ---------------------------------------------------------
+        groups: Dict[str, Tuple[str, ...]] = {}
+        self._groups_plan: Tuple[Tuple[str, ...], ...] = ()
+        if shared:
+            lane_progs = {n: self.programs[n] for n in self._lanes
+                          if n in self.programs}
+            self._groups_plan = plan_shared_groups(lane_progs)
+            for members in self._groups_plan:
+                for m in members:
+                    groups[m] = members
+            self.executor.warm_composites(self._groups_plan)
+        self.policy = self._make_policy(policy, budget_uj_s)
+        # static per-program chip reports: computed once, reused by stats()
+        self._reports = {n: energy.analyze_net(p, f_hz)
+                         for n, p in self.programs.items()}
+        self.policy.bind(PolicyContext(
+            batch=batch, lanes=self._lanes,
+            variants=dict(self._lane_variants),
+            programs=dict(self.programs), reports=dict(self._reports),
+            groups=groups))
+
+        # -- accounting -----------------------------------------------------
+        self._next_rid = 0
+        self._dispatches = 0
+        self._shared_dispatches = 0
+        self._util_sum = 0.0
+        self._served = {lane: 0 for lane in self._lanes}
+        self._padded = {lane: 0 for lane in self._lanes}
+        self._vserved = {name: 0 for name in self.programs}
+        self._vpadded = {name: 0 for name in self.programs}
+        self._host_wall_s = 0.0
+
+    def _make_policy(self, policy, budget_uj_s) -> DispatchPolicy:
+        if isinstance(policy, DispatchPolicy):
+            return policy
+        if policy is None:
+            policy = "operating-point" if self._families else "static"
+        if policy == "static":
+            if self._families:
+                raise ValueError(
+                    "families need a variant-choosing policy; use "
+                    "policy='operating-point' (or drop families=)")
+            return StaticPolicy()
+        if policy == "operating-point":
+            return OperatingPointPolicy(budget_uj_s=budget_uj_s,
+                                        shared=self.shared)
+        raise ValueError(f"unknown policy {policy!r} (have 'static', "
+                         "'operating-point', or a DispatchPolicy)")
+
+    @property
+    def shared_groups(self) -> Tuple[Tuple[str, ...], ...]:
+        """The compiled shared-array groups (empty unless ``shared=True``
+        and some resident S-modes tile the array exactly)."""
+        return self._groups_plan
+
+    @property
+    def families(self) -> Dict[str, Tuple[str, ...]]:
+        return dict(self._families)
+
+    # -- request side -------------------------------------------------------
+
+    def submit(self, program: str, frame) -> int:
+        """Enqueue one frame on a lane (program or family name); returns
+        its request id (arrival order)."""
+        if program not in self._geom:
+            raise KeyError(
+                f"program {program!r} not resident "
+                f"(have {sorted(self._geom)})")
+        h, w, c = self._geom[program]
+        frame = np.asarray(frame)
+        if frame.shape != (h, w, c):
+            raise ValueError(
+                f"{program} expects frames of shape {(h, w, c)}, "
+                f"got {frame.shape}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.submit(FrameRequest(rid=rid, program=program, frame=frame))
+        return rid
+
+    def submit_many(self, program: str, frames) -> List[int]:
+        return [self.submit(program, f) for f in frames]
+
+    # -- dispatch side ------------------------------------------------------
+
+    def _launch(self) -> Optional[Dict[str, Any]]:
+        """Consult the policy for the next dispatch, run it, and bill it.
+        Serving counters are billed at launch — the energy is burned the
+        moment the batch hits the array, synced or not."""
+        dispatch = self.policy.select(self.queue)
+        if dispatch is None:
+            return None
+        index = self._dispatches
+        self._dispatches += 1
+        handle = self.executor.launch(dispatch, index)
+        live = []
+        for ld in dispatch.lanes:
+            n = len(ld.requests)
+            self._served[ld.lane] += n
+            self._padded[ld.lane] += self.batch - n
+            self._vserved[ld.variant] += n
+            self._vpadded[ld.variant] += self.batch - n
+            if n:
+                live.append(self.programs[ld.variant])
+        if dispatch.composite:
+            self._shared_dispatches += 1
+            self._util_sum += energy.array_occupancy(live)
+        else:
+            self._util_sum += 1.0 / self.programs[
+                dispatch.lanes[0].variant].s
+        return handle
+
+    def step(self) -> List[FrameResult]:
+        """One dispatch: pull a static batch, run its program(s), return
+        results for the real (non-padding) frames.  [] once drained.
+
+        With ``prefetch=k`` up to k batches are staged and dispatched
+        *before* blocking on the oldest one, and finished results are
+        pulled to the host by a background thread; batches still leave
+        the queue in exactly the synchronous order, so fairness is
+        untouched.
+        """
+        t0 = time.perf_counter()
+        try:
+            return self.executor.step(self._launch)
+        finally:
+            self._host_wall_s += time.perf_counter() - t0
+
+    def drain(self) -> List[FrameResult]:
+        """Serve until the queue is empty; results in dispatch order."""
+        out: List[FrameResult] = []
+        while True:
+            got = self.step()
+            if not got:
+                return out
+            out.extend(got)
+
+    def close(self) -> None:
+        """Release the background fetch thread, syncing (and discarding —
+        ``drain()`` first to collect them) any in-flight dispatches.  The
+        server keeps working afterwards with prefetch degraded to
+        synchronous fetch; safe to call more than once."""
+        self.executor.close()
+
+    # -- accounting ---------------------------------------------------------
+
+    def stats(self) -> ServeStats:
+        chip = energy.serve_report(self.programs, self._vserved,
+                                   self._vpadded, f_hz=self.f_hz,
+                                   reports=self._reports)
+        total = sum(self._served.values())
+        fps = total / self._host_wall_s if self._host_wall_s else 0.0
+        util = self._util_sum / self._dispatches if self._dispatches else 0.0
+        energy_uj = sum(
+            (self._vserved[v] + self._vpadded[v])
+            * self._reports[v].i2l_energy_per_inference * 1e6
+            for v in self.programs)
+        budget = getattr(self.policy, "budget_uj_s", None)
+        vd = dict(self.policy.variant_dispatches)
+        return ServeStats(served=dict(self._served),
+                          padded=dict(self._padded),
+                          dispatches=self._dispatches,
+                          host_wall_s=self._host_wall_s,
+                          host_frames_per_s=fps,
+                          chip=chip,
+                          array_utilization=util,
+                          shared_dispatches=self._shared_dispatches,
+                          policy=self.policy.name,
+                          variant_dispatches=vd,
+                          energy_uj=energy_uj,
+                          budget_uj_s=budget,
+                          downshift_ratio=self.policy.downshift_ratio())

@@ -1,0 +1,141 @@
+"""Per-member-group composite f-tiles + autotune cache schema v2.
+
+The composite kernel accepts one f-tile per *member group* (groups of
+different sub-array widths want different schedules); tiling stays a
+pure schedule choice — bit-exact for every per-group combination — and
+the autotune cache records/resolves the per-group tuple under a
+versioned entry key so stale (pre-v2) caches degrade to defaults
+instead of mis-steering the new kernel.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.chip import interpreter, networks
+from repro.kernels import autotune, ops
+
+
+def _artifact(program, seed=0):
+    params = interpreter.init_params(jax.random.PRNGKey(seed), program)
+    return interpreter.fold_params(params, program, packed=True)
+
+
+def _frames(program, n, seed=0):
+    io = program.instrs[0]
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n, io.height, io.width, io.in_channels),
+        0, 2 ** io.bits))
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    autotune.invalidate()
+    yield path
+    autotune.invalidate()
+
+
+def _two_group_composite(seed=0):
+    """An S2 + 2xS4 tiling with two member groups: the lone cifar9_s2
+    chain and the two shape-identical mnist5-family S4 chains."""
+    progs = {"s2": networks.cifar9(2, classes=4),
+             "m1": networks.mnist5(),
+             "m2": networks.mnist5(classes=2)}
+    arts = {n: _artifact(p, seed=seed + i)
+            for i, (n, p) in enumerate(progs.items())}
+    cplan, cimage = interpreter.pack_programs(progs, arts)
+    frames = tuple(_frames(p, 2, seed=seed + 10 + i)
+                   for i, p in enumerate(progs.values()))
+    return cplan, cimage, frames
+
+
+@pytest.mark.slow
+def test_per_group_ft_is_pure_schedule():
+    """A per-group ft tuple gives identical composite results as any
+    global ft — per-group tiling is a schedule, never a numeric choice."""
+    cplan, cimage, frames = _two_group_composite()
+    assert cplan.n_groups == 2
+    ref = cplan.forward(cimage, frames, interpret=True, bb=2, ft=0)
+    for ftg in ((0, 32), (64, 0), (32, 32)):
+        got = cplan.forward(cimage, frames, interpret=True, bb=2, ft=ftg)
+        for r, g in zip(ref[0], got[0]):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r),
+                                          err_msg=f"ftg={ftg}")
+        for r, g in zip(ref[1], got[1]):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_per_group_ft_length_validated():
+    cplan, cimage, frames = _two_group_composite(seed=7)
+    with pytest.raises(ValueError, match="member groups"):
+        cplan.forward(cimage, frames, interpret=True, bb=2, ft=(0, 32, 64))
+
+
+def test_member_groups_exposed_through_ops():
+    cplan, _, _ = _two_group_composite(seed=3)
+    groups = ops.member_groups(cplan.spec)
+    assert len(groups) == 2
+    assert sorted(m for g in groups for m in g) == [0, 1, 2]
+
+
+def test_composite_tiles_resolves_per_group_entry(tmp_cache):
+    """A tuned entry carrying ftg resolves to the per-group tuple for
+    per_group readers, while the plain reader keeps the global ft; a
+    group-count mismatch falls back to the global ft."""
+    progs = [networks.mnist5(), networks.mnist5(classes=2)]
+    pkey = autotune.composite_key(progs)
+    autotune.record("mega", pkey, 4,
+                    {"bb": 2, "ft": 32, "ftg": [0, 64], "us": 1.0})
+    assert autotune.composite_tiles(progs, 4) == (2, 32)
+    assert autotune.composite_tiles(progs, 4, per_group=True,
+                                    n_groups=2) == (2, (0, 64))
+    assert autotune.composite_tiles(progs, 4, per_group=True,
+                                    n_groups=3) == (2, 32)
+    # explicit arguments always win, in either form
+    assert autotune.composite_tiles(progs, 4, ft=(32, 32),
+                                    per_group=True, n_groups=2) == (2, (32, 32))
+    assert autotune.composite_tiles(progs, 4, bb=8, ft=0) == (8, 0)
+
+
+def test_stale_schema_entries_degrade_to_defaults(tmp_cache):
+    """Pre-v2 entries (unversioned keys) are invisible to the current
+    reader — a stale committed cache is cold, never wrong."""
+    program = networks.mnist5()
+    pkey = autotune.program_key(program)
+    stale_key = f"mega/{pkey}/b8/{autotune.backend_fingerprint()}"
+    tmp_cache.write_text(json.dumps({stale_key: {"bb": 99, "ft": 77}}))
+    autotune.invalidate()
+    defaults = (autotune.DEFAULTS["mega"]["bb"],
+                autotune.DEFAULTS["mega"]["ft"])
+    assert autotune.mega_tiles(program, 8) == defaults
+    # a fresh record coexists with the stale entry and wins
+    autotune.record("mega", pkey, 8, {"bb": 4, "ft": 32})
+    assert autotune.mega_tiles(program, 8) == (4, 32)
+    raw = json.loads(tmp_cache.read_text())
+    assert stale_key in raw                      # stale data preserved
+    assert any(k.startswith(f"v{autotune.SCHEMA}/") for k in raw)
+
+
+@pytest.mark.slow
+def test_tune_composite_records_per_group(tmp_cache):
+    """tune_composite (per_group default) records both the global ft and
+    the per-group ftg, and CompositePlan.forward resolves through the
+    per-group entry bit-exactly."""
+    cplan, cimage, frames = _two_group_composite(seed=11)
+    entry = autotune.tune_composite(cplan, cimage, frames,
+                                    bb_candidates=(2,),
+                                    ft_candidates=(0, 32), iters=1,
+                                    interpret=True)
+    assert {"bb", "ft", "ftg", "us"} <= set(entry)
+    assert len(entry["ftg"]) == cplan.n_groups
+    bb, ft = autotune.composite_tiles(cplan.programs, 2, per_group=True,
+                                      n_groups=cplan.n_groups)
+    assert bb == entry["bb"] and ft == tuple(entry["ftg"])
+    ref = cplan.forward(cimage, frames, interpret=True, bb=2, ft=0)
+    got = cplan.forward(cimage, frames, interpret=True)    # via cache
+    for r, g in zip(ref[0], got[0]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))

@@ -1,0 +1,501 @@
+"""Policy layer: mechanism/policy split, operating points, controller.
+
+Locks down the serving refactor four ways:
+
+1. **Back-compat** — the pre-split import surface keeps working
+   (``repro.serving.scheduler`` shim), and the split package exposes the
+   mechanism/policy seam (`FrameQueue` primitives, `DispatchPolicy`).
+2. **Fairness property** — under ANY dispatch policy (static, static
+   shared-array, operating-point with/without budget and co-dispatch) a
+   lane that is backlogged before a dispatch is served within the next
+   ``n_lanes`` dispatches, every request exactly once, per-lane FIFO —
+   the round-robin contract survives the policy indirection.
+3. **Budget property** — the operating-point controller never exceeds a
+   feasible energy budget (>= the cheapest variant's steady-state power)
+   by more than one dispatch's energy, and pins to the floor variant
+   when the budget is infeasible.
+4. **End-to-end** — family serving through ``ChipServer`` returns labels
+   bit-exact vs the *chosen variant's* offline forward, downshifts under
+   a tight budget, and co-dispatches on-the-fly composites bit-exactly.
+"""
+
+import random
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chip import energy, interpreter, networks
+from repro.serving import (ChipServer, DispatchPolicy, FrameQueue,
+                           FrameRequest, OperatingPointPolicy, PolicyContext,
+                           StaticPolicy, plan_shared_groups)
+
+
+def _frames(program, n, seed=0):
+    io = program.instrs[0]
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n, io.height, io.width, io.in_channels),
+        0, 2 ** io.bits))
+
+
+def _artifact(program, seed=0):
+    params = interpreter.init_params(jax.random.PRNGKey(seed), program)
+    return interpreter.fold_params(params, program, packed=True)
+
+
+def _offline(program, packed, frames):
+    plan = interpreter.compile_plan(program)
+    logits, labels = plan.forward(packed, np.asarray(frames),
+                                  interpret=True)
+    return np.asarray(logits), np.asarray(labels)
+
+
+# ---------------------------------------------------------------------------
+# 1. Back-compat: the pre-split import surface
+# ---------------------------------------------------------------------------
+
+def test_scheduler_shim_keeps_presplit_imports():
+    """The acceptance contract: every pre-split name still imports from
+    repro.serving.scheduler (and matches the package's objects)."""
+    from repro.serving.scheduler import (ChipServer as C, FrameQueue as Q,
+                                         FrameRequest as R, FrameResult as F,
+                                         ServeStats as S,
+                                         plan_shared_groups as g)
+    import repro.serving as pkg
+    assert C is pkg.ChipServer and Q is pkg.FrameQueue
+    assert R is pkg.FrameRequest and F is pkg.FrameResult
+    assert S is pkg.ServeStats and g is pkg.plan_shared_groups
+
+
+def test_queue_primitives_compose_to_next_batch():
+    """The policy-facing primitives (rr_lanes/first_backlogged/take/
+    advance_past) reproduce next_batch exactly."""
+    a, b = FrameQueue(["x", "y", "z"]), FrameQueue(["x", "y", "z"])
+    for rid, lane in enumerate(["y", "z", "y", "x"]):
+        for q in (a, b):
+            q.submit(FrameRequest(rid=rid, program=lane, frame=None))
+    while True:
+        got = a.next_batch(2)
+        lane = b.first_backlogged()
+        if got is None:
+            assert lane is None
+            break
+        b.advance_past(lane)
+        taken = b.take(lane, 2)
+        assert got[0] == lane
+        assert [r.rid for r in got[1]] == [r.rid for r in taken]
+
+
+# ---------------------------------------------------------------------------
+# 2. Operating points + family compilation
+# ---------------------------------------------------------------------------
+
+def test_operating_points_pareto_front():
+    """The cifar10 family forms a clean front: accuracy and energy both
+    strictly decrease walking most-accurate-first, and a dominated point
+    (more energy, less accuracy) is filtered out."""
+    progs = networks.family_programs("cifar10")
+    pts = energy.operating_points(progs, networks.ACCURACY)
+    assert [p.name for p in pts] == list(networks.FAMILIES["cifar10"])
+    for hi, lo in zip(pts, pts[1:]):
+        assert hi.accuracy > lo.accuracy
+        assert hi.uj_per_frame > lo.uj_per_frame
+    # truncated depth really is the cheapest point (below the S=4 floor)
+    assert pts[-1].name == "cifar9_s4t"
+
+    # declare the full-depth S=4 net LESS accurate than the truncated one:
+    # full-depth is now dominated (more energy, less accuracy) -> dropped
+    acc = dict(networks.ACCURACY)
+    acc["cifar9_s4"], acc["cifar9_s4t"] = acc["cifar9_s4t"], acc["cifar9_s4"]
+    pts = energy.operating_points(progs, acc)
+    assert "cifar9_s4" not in [p.name for p in pts]
+
+
+def test_operating_points_ops_proxy_without_accuracy():
+    """Without declared accuracies the ops-count proxy orders width/depth
+    variants the way Fig. 5 does (wider + deeper = more accurate)."""
+    progs = networks.family_programs("cifar10")
+    pts = energy.operating_points(progs)
+    assert [p.name for p in pts] == list(networks.FAMILIES["cifar10"])
+
+
+def test_compile_family_validates_geometry_and_classes():
+    ok = interpreter.compile_family(networks.family_programs("cifar10"))
+    assert set(ok) == set(networks.FAMILIES["cifar10"])
+    with pytest.raises(Exception, match="IO geometry"):
+        interpreter.compile_family({"a": networks.cifar9(4),
+                                    "b": networks.mnist5()})
+    with pytest.raises(Exception, match="class count"):
+        interpreter.compile_family({"a": networks.cifar9(4),
+                                    "b": networks.cifar9(4, classes=2)})
+
+
+def test_truncated_cifar9_is_a_valid_cheaper_program():
+    full, trunc = networks.cifar9(4), networks.cifar9_truncated()
+    assert len(trunc.conv_instrs) == len(full.conv_instrs) - 1
+    e_full = energy.analyze_net(full).i2l_energy_per_inference
+    e_trunc = energy.analyze_net(trunc).i2l_energy_per_inference
+    assert e_trunc < e_full
+
+
+# ---------------------------------------------------------------------------
+# 3. Policy properties (pure Python, no device work)
+# ---------------------------------------------------------------------------
+
+def _family_context(batch):
+    """A 3-lane context: one 2-variant family, one 2-variant family with a
+    different energy spread, one plain single-variant lane."""
+    programs = {
+        "cifar9_s4": networks.cifar9(4),
+        "cifar9_s4t": networks.cifar9_truncated(),
+        "owner_detector": networks.owner_detector(),
+        "face_detector": networks.face_detector(),
+        "mnist5": networks.mnist5(),
+    }
+    variants = {"cifar10": ("cifar9_s4", "cifar9_s4t"),
+                "face": ("owner_detector", "face_detector"),
+                "mnist5": ("mnist5",)}
+    return PolicyContext(
+        batch=batch,
+        lanes=tuple(variants),
+        variants=variants,
+        programs=programs,
+        reports={n: energy.analyze_net(p) for n, p in programs.items()},
+        groups={})
+
+
+def _static_context(batch):
+    """Four S=4 lanes forming one shared-array group + a solo S=1 lane."""
+    programs = {"a": networks.mnist5(), "b": networks.mnist5(classes=2),
+                "c": networks.mnist5(classes=3),
+                "owner": networks.cifar9(1, classes=2)}
+    groups = {}
+    for members in plan_shared_groups(programs):
+        for m in members:
+            groups[m] = members
+    return PolicyContext(
+        batch=batch, lanes=tuple(programs),
+        variants={n: (n,) for n in programs},
+        programs=programs,
+        reports={n: energy.analyze_net(p) for n, p in programs.items()},
+        groups=groups)
+
+
+def _make_policy(kind, batch):
+    if kind == "static":
+        ctx = _static_context(batch)
+        pol = StaticPolicy()
+    elif kind == "opp":
+        ctx = _family_context(batch)
+        pol = OperatingPointPolicy()
+    elif kind == "opp-budget":
+        ctx = _family_context(batch)
+        # feasible but tight: the floor mix is always affordable
+        floor = min(r.power_w for r in ctx.reports.values()) * 1e6
+        pol = OperatingPointPolicy(budget_uj_s=floor * 1.2, shared=True)
+    else:
+        ctx = _family_context(batch)
+        pol = OperatingPointPolicy(shared=True, backlog_high=2 * batch)
+    pol.bind(ctx)
+    return pol, ctx
+
+
+@settings(max_examples=12, deadline=None)
+@given(kind=st.sampled_from(["static", "opp", "opp-budget", "opp-shared"]),
+       n_reqs=st.integers(4, 40), batch=st.integers(1, 4),
+       seed=st.integers(0, 2 ** 16))
+def test_no_lane_starves_under_any_policy(kind, n_reqs, batch, seed):
+    """Property: whatever the policy (static, shared groups, controller
+    with budget / backlog downshift / composite riders), a lane that is
+    backlogged before a dispatch is served within the next n_lanes
+    dispatches, every request exactly once, per-lane FIFO."""
+    pol, ctx = _make_policy(kind, batch)
+    rng = random.Random(seed)
+    queue = FrameQueue(ctx.lanes)
+    rid, to_submit = 0, n_reqs
+    trace = []
+    while to_submit or queue.pending():
+        if to_submit and (rng.random() < 0.6 or not queue.pending()):
+            lane = rng.choice(list(ctx.lanes))
+            queue.submit(FrameRequest(rid=rid, program=lane, frame=None))
+            rid += 1
+            to_submit -= 1
+        else:
+            before = {l: queue.pending(l) for l in ctx.lanes}
+            d = pol.select(queue)
+            assert d is not None
+            trace.append((d, before))
+    assert pol.select(queue) is None              # drained
+
+    served = [(ld.lane, r.rid) for d, _ in trace for ld in d.lanes
+              for r in ld.requests]
+    assert sorted(r for _, r in served) == list(range(rid))   # exactly once
+    per_lane = {}
+    for lane, r in served:
+        per_lane.setdefault(lane, []).append(r)
+    for lane, rids in per_lane.items():
+        assert rids == sorted(rids)               # per-lane FIFO
+    # no starvation: a backlogged lane is served within n_lanes dispatches
+    n_lanes = len(ctx.lanes)
+    for i, (_, before) in enumerate(trace):
+        window = trace[i:i + n_lanes]
+        if len(window) < n_lanes:
+            continue
+        served_in_window = {ld.lane for d, _ in window for ld in d.lanes
+                            if ld.requests}
+        for lane, pending in before.items():
+            if pending > 0:
+                assert lane in served_in_window, (
+                    f"{kind}: lane {lane} starved at dispatch {i}")
+    # every dispatched variant belongs to its lane, and every request to
+    # its dispatch's lane
+    for d, _ in trace:
+        for ld in d.lanes:
+            assert ld.variant in ctx.variants[ld.lane]
+            assert all(r.program == ld.lane for r in ld.requests)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n_reqs=st.integers(4, 40), batch=st.integers(1, 4),
+       budget_scale_pct=st.integers(100, 300), shared=st.booleans(),
+       seed=st.integers(0, 2 ** 16))
+def test_controller_never_exceeds_feasible_budget(n_reqs, batch,
+                                                  budget_scale_pct, shared,
+                                                  seed):
+    """Property: for any feasible budget (>= the cheapest variant's
+    steady-state power) the controller's committed energy never exceeds
+    budget * committed chip time by more than one dispatch's energy —
+    checked after every dispatch, for any submission interleaving."""
+    ctx = _family_context(batch)
+    floor = min(r.power_w for r in ctx.reports.values()) * 1e6
+    budget = floor * budget_scale_pct / 100.0
+    pol = OperatingPointPolicy(budget_uj_s=budget, shared=shared)
+    pol.bind(ctx)
+    max_e = max(batch * r.i2l_energy_per_inference * 1e6
+                for r in ctx.reports.values())
+    rng = random.Random(seed)
+    queue = FrameQueue(ctx.lanes)
+    rid, to_submit = 0, n_reqs
+    while to_submit or queue.pending():
+        if to_submit and (rng.random() < 0.6 or not queue.pending()):
+            queue.submit(FrameRequest(rid=rid,
+                                      program=rng.choice(list(ctx.lanes)),
+                                      frame=None))
+            rid += 1
+            to_submit -= 1
+        else:
+            assert pol.select(queue) is not None
+            assert (pol.spent_uj
+                    <= budget * pol.chip_time_s + max_e + 1e-9), (
+                f"budget {budget:.0f} exceeded: {pol.spent_uj:.0f} uJ in "
+                f"{pol.chip_time_s:.3f}s")
+
+
+def test_controller_pins_to_floor_when_budget_infeasible():
+    """A budget below the cheapest variant's power can't be met — the
+    always-on pipeline serves at the floor operating point instead of
+    stalling (the chip's 0.92 uJ/f floor)."""
+    ctx = _family_context(batch=2)
+    pol = OperatingPointPolicy(budget_uj_s=1e-6)
+    pol.bind(ctx)
+    queue = FrameQueue(ctx.lanes)
+    for rid in range(6):
+        queue.submit(FrameRequest(rid=rid, program="cifar10", frame=None))
+    while True:
+        d = pol.select(queue)
+        if d is None:
+            break
+        assert all(ld.variant == "cifar9_s4t" for ld in d.lanes)
+
+
+def test_controller_downshifts_under_backlog():
+    """Backlog above backlog_high downshifts one step even with no
+    budget: the lane catches up at a cheaper, faster operating point."""
+    ctx = _family_context(batch=2)
+    pol = OperatingPointPolicy(backlog_high=4)
+    pol.bind(ctx)
+    queue = FrameQueue(ctx.lanes)
+    for rid in range(6):                          # 6 >= backlog_high=4
+        queue.submit(FrameRequest(rid=rid, program="cifar10", frame=None))
+    d = pol.select(queue)
+    assert d.lanes[0].variant == "cifar9_s4t"     # downshifted
+    queue.take("cifar10", 10)                     # clear the backlog
+    queue.submit(FrameRequest(rid=99, program="cifar10", frame=None))
+    d = pol.select(queue)
+    assert d.lanes[0].variant == "cifar9_s4"      # back to the top point
+
+
+def test_controller_composites_exact_tilings_only():
+    """With shared=True the controller co-dispatches backlogged lanes
+    only when the chosen variants tile the array exactly; a downshifted
+    family (S=4) plus an S=1 family can't tile -> solo."""
+    ctx = _family_context(batch=2)
+    pol = OperatingPointPolicy(shared=True, budget_uj_s=1e-6)  # all floors
+    pol.bind(ctx)
+    queue = FrameQueue(ctx.lanes)
+    # floors: cifar10->cifar9_s4t (S=4), face->face_detector (S=4),
+    # mnist5 (S=4): only 3 backlogged S=4 lanes -> 0.75 occupancy, no
+    # exact tiling -> solo dispatch of the head lane only
+    for lane in ("cifar10", "face", "mnist5"):
+        queue.submit(FrameRequest(rid=0, program=lane, frame=None))
+    d = pol.select(queue)
+    assert len(d.lanes) == 1
+
+
+# ---------------------------------------------------------------------------
+# 4. End-to-end: family serving through ChipServer
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cifar_family_setup():
+    progs = {"cifar9_s4": networks.cifar9(4),
+             "cifar9_s4t": networks.cifar9_truncated()}
+    arts = {n: _artifact(p, seed=i) for i, (n, p) in enumerate(progs.items())}
+    frames = _frames(progs["cifar9_s4"], 6, seed=5)
+    oracle = {n: _offline(progs[n], arts[n], frames) for n in progs}
+    return progs, arts, frames, oracle
+
+
+def test_family_serving_bit_exact_per_chosen_variant(cifar_family_setup):
+    """Controller-served results carry the variant that ran them, and
+    every label/logit row is bit-exact vs that variant's offline forward
+    on the same frame — for an unconstrained and a floor-pinned run."""
+    progs, arts, frames, oracle = cifar_family_setup
+    for budget, want in ((None, {"cifar9_s4"}), (1e-6, {"cifar9_s4t"})):
+        server = ChipServer(progs, arts, batch=2, interpret=True,
+                            families={"cifar10": tuple(progs)},
+                            budget_uj_s=budget)
+        rids = server.submit_many("cifar10", frames)
+        results = server.drain()
+        assert [r.rid for r in results] == rids
+        assert {r.variant for r in results} == want
+        assert all(r.program == "cifar10" for r in results)
+        for i, r in enumerate(results):
+            np.testing.assert_array_equal(r.logits, oracle[r.variant][0][i])
+            assert r.label == oracle[r.variant][1][i]
+        stats = server.stats()
+        assert stats.policy == "operating-point"
+        assert stats.served == {"cifar10": len(frames)}
+        assert stats.downshift_ratio == (0.0 if budget is None else 1.0)
+        # utilization reflects the chosen width (both variants are S=4)
+        assert stats.array_utilization == pytest.approx(0.25)
+
+
+def test_family_serving_mixed_budget_downshifts(cifar_family_setup):
+    """A budget between the two variants' powers serves a mix: both
+    variants dispatch, the average power stays under budget, every
+    result still bit-exact vs its chosen variant."""
+    progs, arts, frames, oracle = cifar_family_setup
+    reps = {n: energy.analyze_net(p) for n, p in progs.items()}
+    powers = sorted(r.power_w * 1e6 for r in reps.values())
+    budget = (powers[0] + powers[1]) / 2
+    server = ChipServer(progs, arts, batch=1, interpret=True,
+                        families={"cifar10": tuple(progs)},
+                        budget_uj_s=budget)
+    server.submit_many("cifar10", frames)
+    results = server.drain()
+    for i, r in enumerate(results):
+        assert r.label == oracle[r.variant][1][i]
+    stats = server.stats()
+    assert 0.0 < stats.downshift_ratio < 1.0
+    assert set(v for v, n in stats.variant_dispatches.items() if n) == \
+        set(progs)
+    # the committed average power respects the budget (one-dispatch slack)
+    pol = server.policy
+    max_e = max(1 * r.i2l_energy_per_inference * 1e6 for r in reps.values())
+    assert pol.spent_uj <= budget * pol.chip_time_s + max_e
+
+
+def test_controller_shared_composites_bit_exact():
+    """Four single-variant S=4 family lanes under the shared controller
+    co-dispatch as ONE on-the-fly composite — bit-exact vs offline, with
+    full array utilization."""
+    progs = {"a": networks.mnist5(), "b": networks.mnist5(classes=2),
+             "c": networks.mnist5(classes=3), "d": networks.mnist5(classes=5)}
+    arts = {n: _artifact(p, seed=10 + i)
+            for i, (n, p) in enumerate(progs.items())}
+    frames = {n: _frames(p, 2, seed=20 + i)
+              for i, (n, p) in enumerate(progs.items())}
+    oracle = {n: _offline(progs[n], arts[n], frames[n])[1] for n in progs}
+    server = ChipServer(progs, arts, batch=2, interpret=True, shared=True,
+                        policy="operating-point",
+                        families={f"fam_{n}": (n,) for n in progs})
+    for n in progs:
+        server.submit_many(f"fam_{n}", frames[n])
+    results = server.drain()
+    stats = server.stats()
+    assert stats.shared_dispatches == 1 and stats.dispatches == 1
+    assert stats.array_utilization == pytest.approx(1.0)
+    for n in progs:
+        got = [r.label for r in sorted(results, key=lambda r: r.rid)
+               if r.variant == n]
+        np.testing.assert_array_equal(np.array(got), oracle[n], err_msg=n)
+
+
+def test_policy_rebinding_resets_committed_state():
+    """Reusing a policy instance on a fresh server must not carry the
+    previous server's committed energy/time (or a stale backlog
+    threshold) into budget decisions."""
+    pol = OperatingPointPolicy(budget_uj_s=1e12)
+    pol.bind(_family_context(batch=2))
+    queue = FrameQueue(pol.ctx.lanes)
+    queue.submit(FrameRequest(rid=0, program="cifar10", frame=None))
+    pol.select(queue)
+    assert pol.spent_uj > 0
+    pol.bind(_family_context(batch=4))
+    assert pol.spent_uj == 0.0 and pol.chip_time_s == 0.0
+    assert pol._backlog_high == 16                 # 4 * new batch
+
+
+def test_operating_points_partial_anchors_use_consistent_proxy():
+    """A partially-anchored family must not mix real accuracies with the
+    raw ops proxy in one sort — the whole family falls back to the
+    proxy scale."""
+    progs = {"s4": networks.cifar9(4), "s4t": networks.cifar9_truncated()}
+    pts = energy.operating_points(progs, {"s4": 0.785})   # s4t unanchored
+    assert [p.name for p in pts] == ["s4", "s4t"]
+    assert pts[0].accuracy > 1.0                   # proxy scale throughout
+
+
+def test_custom_policy_instance_is_accepted():
+    """A user-supplied DispatchPolicy drives dispatch; ServeStats reports
+    its name and per-variant dispatch counts."""
+
+    class CheapestFirst(DispatchPolicy):
+        name = "cheapest-first"
+
+        def select(self, queue):
+            inner = StaticPolicy()
+            inner.ctx = self.ctx
+            inner.variant_dispatches = self.variant_dispatches
+            return inner.select(queue)
+
+    program = networks.mnist5()
+    server = ChipServer({"m": program}, {"m": _artifact(program)},
+                        batch=2, interpret=True, policy=CheapestFirst())
+    server.submit_many("m", _frames(program, 3))
+    assert len(server.drain()) == 3
+    stats = server.stats()
+    assert stats.policy == "cheapest-first"
+    assert stats.variant_dispatches["m"] == 2
+
+
+def test_server_guards_families():
+    progs = {"cifar9_s4": networks.cifar9(4),
+             "cifar9_s4t": networks.cifar9_truncated()}
+    arts = {n: _artifact(p) for n, p in progs.items()}
+    with pytest.raises(ValueError, match="collides"):
+        ChipServer(progs, arts, interpret=True,
+                   families={"cifar9_s4": ("cifar9_s4t",)})
+    with pytest.raises(ValueError, match="not resident"):
+        ChipServer(progs, arts, interpret=True,
+                   families={"f": ("ghost",)})
+    with pytest.raises(ValueError, match="belongs to families"):
+        ChipServer(progs, arts, interpret=True,
+                   families={"f": ("cifar9_s4",), "g": ("cifar9_s4",)})
+    with pytest.raises(ValueError, match="policy"):
+        ChipServer(progs, arts, interpret=True, policy="static",
+                   families={"f": tuple(progs)})
+    with pytest.raises(ValueError, match="unknown policy"):
+        ChipServer(progs, arts, interpret=True, policy="zigzag")
