@@ -17,15 +17,24 @@ Two kinds of checks:
   (and say why in the PR).  Absolute frames/s only compare within one
   machine class, so when the recorded ``host`` fingerprint (or backend)
   differs from the baseline these checks downgrade to warnings.
+* **latency keys** (``serve_p99_ms``, ``serve_p99_ms_static``) are the
+  mirror image: lower is better, so they fail when the fresh run is
+  more than the tolerance *above* the baseline (host-gated the same
+  way).
 * **invariant keys** — machine-independent ratios that must never dip
   below 1: the megakernel must beat the staged plan
   (``megakernel_speedup_vs_staged``), the fused plan must beat the seed
   path (``pipeline_fused_speedup``), shared-array composite dispatch
   must beat time-interleaved solo dispatch
-  (``serve_shared_speedup_vs_solo``), and the always-on cascade must
-  cost at most the recognizer alone
-  (``cascade_savings_vs_recognizer``).  These hold on any host, so they
-  are hard floors rather than tolerance bands.
+  (``serve_shared_speedup_vs_solo``), the always-on cascade must cost
+  at most the recognizer alone (``cascade_savings_vs_recognizer``), and
+  continuous batching must beat static dispatch on the committed
+  Poisson trace in both p99 latency
+  (``serve_p99_speedup_vs_static``) and uJ/frame
+  (``serve_energy_ratio_vs_static``).  These hold on any host, so they
+  are hard floors rather than tolerance bands.  One cross-key check
+  rides along: ``serve_padding_ratio_continuous`` must stay strictly
+  below ``serve_padding_ratio_static`` within the fresh run.
 
 Keys present on only ONE side (a metric newly added by this PR, or one
 the baseline carries but the fresh run no longer emits) are reported as
@@ -48,7 +57,12 @@ import sys
 
 THROUGHPUT_KEYS = ("pipeline_frames_per_s", "serve_frames_per_s",
                    "serve_frames_per_s_multi", "serve_frames_per_s_shared",
-                   "serve_frames_per_s_cascade")
+                   "serve_frames_per_s_cascade",
+                   "serve_frames_per_s_continuous")
+# latency keys: LOWER is better — fail when the fresh run is more than
+# the tolerance ABOVE the committed baseline (host-gated like the
+# absolute frames/s keys)
+LATENCY_KEYS = ("serve_p99_ms", "serve_p99_ms_static")
 INVARIANT_FLOORS = {
     "megakernel_speedup_vs_staged": 1.0,
     "pipeline_fused_speedup": 1.0,
@@ -57,7 +71,19 @@ INVARIANT_FLOORS = {
     # recognizer (the big net) on every frame — the whole point of the
     # detector stage; holds on any host (pure energy-model ratio)
     "cascade_savings_vs_recognizer": 1.0,
+    # continuous batching must beat static dispatch on the committed
+    # Poisson trace: lower p99 input-to-label latency AND equal-or-
+    # better uJ/frame — both are same-run paired ratios, so they hold
+    # on any host
+    "serve_p99_speedup_vs_static": 1.0,
+    "serve_energy_ratio_vs_static": 1.0,
 }
+# cross-key invariants: (lhs, rhs) pairs where fresh[lhs] must stay
+# strictly below fresh[rhs] — the continuous admission window must burn
+# fewer padding slots than the static pad (host-independent)
+CROSS_KEY_BELOW = (
+    ("serve_padding_ratio_continuous", "serve_padding_ratio_static"),
+)
 
 
 def check(baseline: dict, fresh: dict, tolerance: float) -> list:
@@ -91,6 +117,28 @@ def check(baseline: dict, fresh: dict, tolerance: float) -> list:
                 f"{key} regressed {(1 - ratio) * 100:.0f}% "
                 f"(> {tolerance * 100:.0f}% tolerance): "
                 f"{base:,.1f} -> {new:,.1f}")
+    for key in LATENCY_KEYS:
+        if key not in fresh:
+            level = ("warning (in baseline, not in fresh run)"
+                     if key in baseline else "warning (not measured)")
+            print(f"  {key}: missing from the fresh run — {level}")
+            continue
+        if key not in baseline:
+            print(f"  {key}: no baseline yet ({fresh[key]:.2f} ms fresh) — "
+                  "warning only (refresh BENCH_kernels.json to track it)")
+            continue
+        base, new = float(baseline[key]), float(fresh[key])
+        ratio = new / base if base else 1.0
+        bad = ratio > 1.0 + tolerance
+        verdict = ("ok" if not bad
+                   else "REGRESSION" if same_host else "warning (new host)")
+        print(f"  {key}: {base:.2f} -> {new:.2f} ms  ({ratio:.2f}x)  "
+              f"{verdict}")
+        if bad and same_host:
+            failures.append(
+                f"{key} regressed {(ratio - 1) * 100:.0f}% "
+                f"(> {tolerance * 100:.0f}% tolerance): "
+                f"{base:.2f} -> {new:.2f} ms")
     for key, floor in INVARIANT_FLOORS.items():
         if key not in fresh:
             level = ("warning (in baseline, not in fresh run)"
@@ -103,6 +151,15 @@ def check(baseline: dict, fresh: dict, tolerance: float) -> list:
         if val < floor:
             failures.append(f"{key} = {val:.2f} fell below the {floor:.2f} "
                             "floor")
+    for lhs, rhs in CROSS_KEY_BELOW:
+        if lhs not in fresh or rhs not in fresh:
+            print(f"  {lhs} < {rhs}: not measured — warning only")
+            continue
+        lo, hi = float(fresh[lhs]), float(fresh[rhs])
+        verdict = "ok" if lo < hi else "VIOLATED"
+        print(f"  {lhs} ({lo:.4f}) < {rhs} ({hi:.4f})  {verdict}")
+        if lo >= hi:
+            failures.append(f"{lhs} = {lo:.4f} is not below {rhs} = {hi:.4f}")
     return failures
 
 

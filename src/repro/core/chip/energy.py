@@ -390,20 +390,31 @@ class ServeReport:
 
 def serve_report(programs: dict, frames: dict, padded: dict | None = None,
                  f_hz: float = F_EMIN,
-                 reports: dict | None = None) -> ServeReport:
+                 reports: dict | None = None,
+                 billed: int | None = None) -> ServeReport:
     """Bill a serving mix: ``programs``/``frames`` keyed by program name.
 
     Returns the frame-weighted µJ/frame and frames/s of running
     ``frames[name]`` inferences of each program (plus ``padded[name]``
-    wasted static-batch slots) back-to-back on one chip at ``f_hz``.
-    Pass precomputed ``reports`` ({name: NetReport} at the same ``f_hz``)
-    to skip re-analysis — the per-program reports are static, so a
-    serving loop polling its stats shouldn't rebuild them every call.
+    wasted batch slots — the scheduler's actual pad per dispatch, which
+    with continuous batching varies per launch) back-to-back on one chip
+    at ``f_hz``.  Pass precomputed ``reports`` ({name: NetReport} at the
+    same ``f_hz``) to skip re-analysis — the per-program reports are
+    static, so a serving loop polling its stats shouldn't rebuild them
+    every call.  ``billed`` (the scheduler's count of launched frame
+    slots) cross-checks the bill: served + padded must equal it exactly,
+    or the accounting has drifted and the report raises.
     """
     padded = dict(padded or {})
     if reports is None:
         reports = {n: analyze_net(p, f_hz) for n, p in programs.items()}
     served = sum(frames.get(n, 0) for n in programs)
+    if billed is not None:
+        pad_total = sum(padded.get(n, 0) for n in programs)
+        if served + pad_total != billed:
+            raise ValueError(
+                f"serve bill mismatch: {served} served + {pad_total} "
+                f"padded != {billed} billed frame slots")
     burned = {n: frames.get(n, 0) + padded.get(n, 0) for n in programs}
     energy_j = sum(burned[n] * reports[n].i2l_energy_per_inference
                    for n in programs)

@@ -37,6 +37,16 @@ Two runtime modes on top of plain static serving:
   (``--margin``) escalate to the 14.4 uJ/f S=1 owner recognizer::
 
       PYTHONPATH=src python -m repro.launch.chip_serve --cascade
+
+* ``--traffic {poisson,bursty,diurnal}`` replays a seeded arrival trace
+  in real time instead of enqueueing everything up front — the streaming
+  workload the paper's always-on figures assume.  ``--rate`` sets the
+  arrival rate (frames/s), ``--slo-ms`` the per-lane latency SLO, and
+  ``--policy continuous`` turns on the rolling admission window that
+  autoscales the batch against the measured rate::
+
+      PYTHONPATH=src python -m repro.launch.chip_serve \
+          --traffic poisson --rate 200 --policy continuous --slo-ms 20
 """
 
 from __future__ import annotations
@@ -48,7 +58,7 @@ import numpy as np
 
 from repro.core.chip import energy, interpreter, networks
 from repro.distributed import sharding
-from repro.serving import CascadePipeline, ChipServer
+from repro.serving import CascadePipeline, ChipServer, make_trace, replay
 
 
 def build_artifact(program, seed: int, warm_bn: bool):
@@ -105,13 +115,28 @@ def main(argv=None):
                          "for each resident program on this backend "
                          "before serving (persisted in the autotune "
                          "cache, see kernels/autotune.py)")
-    ap.add_argument("--policy", choices=("static", "operating-point"),
+    ap.add_argument("--policy",
+                    choices=("static", "operating-point", "continuous"),
                     default="static",
                     help="dispatch policy: 'static' serves each lane "
                          "with its own program; 'operating-point' serves "
                          "program families (names in --programs may be "
                          "networks.FAMILIES entries) at the energy-"
-                         "accuracy point the budget and backlog call for")
+                         "accuracy point the budget and backlog call for; "
+                         "'continuous' adds the rolling admission window "
+                         "that autoscales the batch against measured "
+                         "arrival rate and --slo-ms (composes with the "
+                         "operating-point controller when families are "
+                         "served)")
+    ap.add_argument("--traffic", choices=("poisson", "bursty", "diurnal"),
+                    default=None,
+                    help="replay a seeded arrival trace in real time "
+                         "instead of enqueueing all frames up front")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="traffic arrival rate in frames/s (all lanes)")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="per-lane input-to-label latency SLO for the "
+                         "continuous policy's admission window")
     ap.add_argument("--budget-uj-s", type=float, default=None,
                     help="operating-point controller energy budget: max "
                          "chip-model average power in uJ/s (uW); tight "
@@ -134,7 +159,7 @@ def main(argv=None):
 
     names = [n.strip() for n in args.programs.split(",") if n.strip()]
     families = {}
-    if args.policy == "operating-point":
+    if args.policy in ("operating-point", "continuous"):
         # family names expand to their member variants behind one lane
         expanded = []
         for n in names:
@@ -195,7 +220,8 @@ def main(argv=None):
                         megakernel=args.megakernel, prefetch=prefetch,
                         shared=args.shared, policy=args.policy,
                         families=families or None,
-                        budget_uj_s=args.budget_uj_s)
+                        budget_uj_s=args.budget_uj_s,
+                        slo_ms=args.slo_ms)
     print(f"resident programs: {names}  (batch={args.batch}, "
           f"devices={ndev}, S-modes={[programs[n].s for n in names]}, "
           f"megakernel={args.megakernel}, prefetch={prefetch}, "
@@ -215,7 +241,6 @@ def main(argv=None):
               + (", ".join("+".join(g) for g in groups)
                  if groups else "none (S-modes do not tile the array)"))
 
-    # interleaved synthetic streams: round-robin submission across lanes
     lanes = list(server.queue.lanes)
     geom_prog = {lane: programs[server.families.get(lane, (lane,))[0]]
                  for lane in lanes}
@@ -223,15 +248,27 @@ def main(argv=None):
                               -(-args.requests // len(lanes)),
                               args.seed + 100 + i)
            for i, lane in enumerate(lanes)}
-    idx = {lane: 0 for lane in lanes}
-    submitted = 0
-    while submitted < args.requests:
-        lane = lanes[submitted % len(lanes)]
-        server.submit(lane, per[lane][idx[lane]])
-        idx[lane] += 1
-        submitted += 1
-
-    results = server.drain()
+    if args.traffic:
+        # seeded arrival trace, replayed with real-time pacing: frames
+        # hit the queue at their trace offsets and latency is measured
+        # against the arrival process
+        trace = make_trace(args.traffic, lanes, args.rate, args.requests,
+                           seed=args.seed)
+        print(f"replaying {args.traffic} trace: {len(trace)} frames at "
+              f"{args.rate:,.0f} f/s mean over {len(lanes)} lane(s), "
+              f"seed {args.seed}, SLO {args.slo_ms:.0f} ms "
+              f"({trace.duration_s:.2f} s span)")
+        results = replay(server, trace, per)
+    else:
+        # interleaved synthetic streams: round-robin submission up front
+        idx = {lane: 0 for lane in lanes}
+        submitted = 0
+        while submitted < args.requests:
+            lane = lanes[submitted % len(lanes)]
+            server.submit(lane, per[lane][idx[lane]])
+            idx[lane] += 1
+            submitted += 1
+        results = server.drain()
     stats = server.stats()
 
     counts = {lane: 0 for lane in lanes}
@@ -257,6 +294,15 @@ def main(argv=None):
               + (f" under budget {stats.budget_uj_s:,.0f} uJ/s)"
                  if stats.budget_uj_s else ", no budget)"))
     print(f"host-sim throughput : {stats.host_frames_per_s:,.0f} frames/s")
+    if stats.p99_ms > 0.0:
+        slo = args.slo_ms
+        met = sum(1 for e in server.latency_trace()
+                  if e["latency_ms"] <= slo) / max(1, len(server.latency_trace()))
+        print(f"input-to-label      : p50 {stats.p50_ms:.2f} / "
+              f"p95 {stats.p95_ms:.2f} / p99 {stats.p99_ms:.2f} ms "
+              f"({met:.1%} within the {slo:.0f} ms SLO)")
+        print(f"padding ratio       : {stats.padding_ratio:.3f} burned "
+              f"slots per billed slot")
     print(f"array utilization   : {stats.array_utilization:.2f} mean "
           f"occupied fraction over {stats.dispatches} dispatches "
           f"({stats.shared_dispatches} shared)")

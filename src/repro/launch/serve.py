@@ -9,14 +9,21 @@ example's window stream).
 The request queue is the chip-tier scheduler's
 :class:`repro.serving.queue.FrameQueue` — both serving stacks (the
 BinarEye frame service and this LM batcher) now share one queue
-mechanism: requests enqueue on a lane, ``next_batch`` pulls up to a
-static batch in FIFO order, and a multi-model deployment gets the same
-round-robin fairness contract the chip server property-tests.
+mechanism: requests enqueue on a lane, ``next_batch`` pulls a batch in
+FIFO order, and a multi-model deployment gets the same round-robin
+fairness contract the chip server property-tests.  The pull size is no
+longer fixed: admissions are timestamped, the queue's EWMA arrival-rate
+estimator (the same one the chip tier's continuous policy uses) sizes
+each pull to what ``--slo-ms`` of arrivals should deliver, and
+``--rate`` paces synthetic admission to make the estimate meaningful
+(unpaced admission measures a near-infinite rate and degrades to the
+full ``--batch``, the old behaviour).
 """
 
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import jax
@@ -38,6 +45,14 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="simulated request arrival rate (req/s): paces "
+                         "admission so the queue's EWMA rate estimator "
+                         "sees realistic gaps (unpaced when omitted)")
+    ap.add_argument("--slo-ms", type=float, default=200.0,
+                    help="per-request latency SLO the batch sizing "
+                         "targets: each pull takes what --rate arrivals "
+                         "should deliver within half the SLO")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -58,22 +73,44 @@ def main(argv=None):
     # a long stream never materializes every prompt up front.
     queue = FrameQueue([args.arch])
     next_rid = 0
+    t_start = time.perf_counter()
 
     def admit():
         nonlocal next_rid
         while next_rid < args.requests and queue.pending() < args.batch:
+            if args.rate:
+                # paced admission: request rid arrives at rid/rate; wait
+                # for it only when the queue is empty (otherwise serve
+                # what's already here and come back)
+                due = t_start + next_rid / args.rate
+                wait = due - time.perf_counter()
+                if wait > 0:
+                    if queue.pending():
+                        return
+                    time.sleep(wait)
             prompt = dtok.batch_for_step(cfg, next_rid, global_batch=1,
                                          seq_len=args.prompt_len)["tokens"]
             queue.submit(FrameRequest(rid=next_rid, program=args.arch,
-                                      frame=prompt))
+                                      frame=prompt,
+                                      t_submit=time.perf_counter()))
             next_rid += 1
+
+    def pull_size() -> int:
+        # the chip tier's continuous-batching target: what the measured
+        # arrival rate should deliver inside half the SLO, clamped to
+        # the slot pool; full batch until the estimator has a signal
+        rate = queue.arrival_rate(args.arch)
+        if rate <= 0.0:
+            return args.batch
+        want = math.ceil(rate * (args.slo_ms / 1e3) * 0.5)
+        return max(1, min(want, args.batch))
 
     served = 0
     t0 = time.time()
     key = jax.random.PRNGKey(42)
     while True:
         admit()
-        pulled = queue.next_batch(args.batch)
+        pulled = queue.next_batch(pull_size())
         if pulled is None:
             break
         _, reqs = pulled

@@ -4,14 +4,17 @@ Mechanism/policy split (see :mod:`repro.serving.server` for the model and
 ``docs/serving.md`` for the chip analogy):
 
 * queue    — per-lane FIFOs + round-robin pointer (:mod:`.queue`)
-* policy   — static or operating-point dispatch (:mod:`.policy`)
+* policy   — static, operating-point, or continuous dispatch (:mod:`.policy`)
 * executor — pad/dispatch/finish + prefetch pipeline (:mod:`.executor`)
 * server   — the thin ``ChipServer`` composition (:mod:`.server`)
 * cascade  — detector -> recognizer always-on pipelines (:mod:`.cascade`)
+* traffic  — seeded arrival traces + replay for latency benches
+  (:mod:`.traffic`)
 """
 
 from repro.serving.cascade import CascadePipeline, CascadeResult  # noqa: F401
 from repro.serving.policy import (  # noqa: F401
+    ContinuousPolicy,
     Dispatch,
     DispatchPolicy,
     LaneDispatch,
@@ -20,9 +23,21 @@ from repro.serving.policy import (  # noqa: F401
     StaticPolicy,
 )
 from repro.serving.queue import (  # noqa: F401
+    EwmaRate,
     FrameQueue,
     FrameRequest,
     FrameResult,
     plan_shared_groups,
 )
 from repro.serving.server import ChipServer, ServeStats  # noqa: F401
+from repro.serving.traffic import (  # noqa: F401
+    ArrivalTrace,
+    VirtualClock,
+    bursty_trace,
+    diurnal_trace,
+    load_trace,
+    make_trace,
+    poisson_trace,
+    replay,
+    save_trace,
+)

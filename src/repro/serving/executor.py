@@ -19,13 +19,21 @@ here:
   dispatches in flight before blocking on the oldest one, with finished
   results fetched to host memory by a background thread; the policy is
   still consulted in exactly the synchronous order, so pipelining never
-  changes the schedule (property-tested).
+  changes the schedule (property-tested).  At depth 1 the background
+  thread is skipped: with a single in-flight handle the consumer pops it
+  immediately, so a fetch thread adds handoff overhead without any
+  overlap to win (the BENCH prefetch-anomaly fix).
+
+Dispatches carry their own pad target (``Dispatch.batch``): a continuous
+policy's early-and-small launches pad only to their bucket size, not the
+full static batch, so the burned-slot bill shrinks with the window.
 """
 
 from __future__ import annotations
 
 import collections
 import concurrent.futures
+import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
@@ -51,10 +59,12 @@ class Executor:
                  artifacts: Mapping[str, Any], *, batch: int,
                  mesh=None, donate_frames: bool = False,
                  interpret: Optional[bool] = None,
-                 megakernel: bool = False, prefetch: int = 0):
+                 megakernel: bool = False, prefetch: int = 0,
+                 clock: Callable[[], float] = time.perf_counter):
         self.batch = batch
         self.mesh = mesh
         self.prefetch = prefetch
+        self.clock = clock
         self._donate = donate_frames
         self._interpret = interpret
         self._megakernel = megakernel
@@ -82,10 +92,13 @@ class Executor:
                 megakernel=megakernel)
         self._composites: Dict[Tuple[str, ...], Dict[str, Any]] = {}
         self._inflight: collections.deque = collections.deque()
+        # background fetch only pays off at depth >= 2: with one handle
+        # in flight the consumer blocks on it immediately, so a thread
+        # handoff is pure overhead (see module docstring)
         self._fetch_pool: Optional[concurrent.futures.ThreadPoolExecutor] = (
             concurrent.futures.ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="serve-fetch")
-            if self.prefetch else None)
+            if self.prefetch >= 2 else None)
 
     def geometry(self, variant: str) -> Tuple[int, int, int]:
         return self._geom[variant]
@@ -124,30 +137,35 @@ class Executor:
     # -- launch / materialize / finish --------------------------------------
 
     def pad_frames(self, reqs: List[FrameRequest],
-                   geom: Tuple[int, int, int]):
-        """Stack a lane's pull into a full static batch (the always-on
-        pipeline doesn't idle: short lanes pad with the last real frame,
-        empty lanes with zeros; the burned slots are billed)."""
+                   geom: Tuple[int, int, int],
+                   size: Optional[int] = None):
+        """Stack a lane's pull into a batch of ``size`` (default: the
+        static batch — the always-on pipeline doesn't idle: short lanes
+        pad with the last real frame, empty lanes with zeros; the burned
+        slots are billed)."""
+        size = self.batch if size is None else size
         if reqs:
             frames = np.stack([r.frame for r in reqs])
-            if len(reqs) < self.batch:
+            if len(reqs) < size:
                 pad = np.broadcast_to(
-                    frames[-1], (self.batch - len(reqs),) + frames.shape[1:])
+                    frames[-1], (size - len(reqs),) + frames.shape[1:])
                 frames = np.concatenate([frames, pad])
         else:
-            frames = np.zeros((self.batch,) + geom, dtype=np.int32)
+            frames = np.zeros((size,) + geom, dtype=np.int32)
         return frames
 
     def launch(self, dispatch: Dispatch, index: int) -> Dict[str, Any]:
         """Run one policy decision on the device; returns the in-flight
         handle (device arrays, not yet synced)."""
+        size = dispatch.batch if dispatch.batch is not None else self.batch
         if dispatch.composite:
             variants = tuple(ld.variant for ld in dispatch.lanes)
             comp = self.composite_for(variants)
             frames = []
             for ld in dispatch.lanes:
                 f = jnp.asarray(self.pad_frames(list(ld.requests),
-                                                self._geom[ld.variant]))
+                                                self._geom[ld.variant],
+                                                size))
                 if self.mesh is not None:
                     f = sharding.scatter_frames(self.mesh, f)
                 frames.append(f)
@@ -156,7 +174,7 @@ class Executor:
                         labels=labels)
         ld, = dispatch.lanes
         frames = jnp.asarray(self.pad_frames(list(ld.requests),
-                                             self._geom[ld.variant]))
+                                             self._geom[ld.variant], size))
         if self.mesh is not None:
             frames = sharding.scatter_frames(self.mesh, frames)
         logits, labels = self._fns[ld.variant](self.artifacts[ld.variant],
@@ -184,6 +202,7 @@ class Executor:
         else:
             logits, labels = self.materialize(handle)
         dispatch: Dispatch = handle["dispatch"]
+        t_done = self.clock()        # label available on the host, now
         if dispatch.composite:
             out = []
             for mi, ld in enumerate(dispatch.lanes):
@@ -192,13 +211,15 @@ class Executor:
                                 label=int(labels[mi][i]),
                                 logits=logits[mi][i],
                                 dispatch=handle["index"],
-                                variant=ld.variant)
+                                variant=ld.variant,
+                                t_submit=r.t_submit, t_done=t_done)
                     for i, r in enumerate(ld.requests))
             return out
         ld, = dispatch.lanes
         return [FrameResult(rid=r.rid, program=ld.lane, label=int(labels[i]),
                             logits=logits[i], dispatch=handle["index"],
-                            variant=ld.variant)
+                            variant=ld.variant,
+                            t_submit=r.t_submit, t_done=t_done)
                 for i, r in enumerate(ld.requests)]
 
     # -- the prefetch pipeline ----------------------------------------------

@@ -26,6 +26,18 @@ any of those operating points; this module owns the *choice*:
   other backlogged lanes whose chosen variants tile the array exactly
   (PR 4's composite packing, formed per dispatch instead of at
   admission).
+* :class:`ContinuousPolicy` — rolling/continuous batching: frames are
+  admitted into an in-flight dispatch window instead of being padded to
+  the fixed lane batch.  The *batch size* autoscales against the lane's
+  measured EWMA arrival rate and a per-lane latency SLO, and the
+  dispatcher launches early-and-small when the oldest queued frame's
+  deadline approaches.  It composes with the policies above through an
+  ``inner`` policy: the continuous layer decides *when* to dispatch and
+  *how many* frames, the inner policy decides *what* runs them (the
+  operating-point controller autoscales the variant, this autoscales
+  the batch).  Variable dispatch sizes are quantised onto a small
+  bucket ladder so the jit/compile cache stays bounded and the autotune
+  cache's nearest-batch tile lookup covers every size.
 
 Budget semantics (property-tested in tests/test_policy.py): the
 controller accounts every dispatch's chip-model energy and time at
@@ -41,7 +53,9 @@ allowance by more than one dispatch.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Tuple
+import math
+import time
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 from repro.core.chip import energy, isa
 from repro.serving.queue import FrameQueue, FrameRequest
@@ -60,10 +74,13 @@ class LaneDispatch:
 
 @dataclasses.dataclass(frozen=True)
 class Dispatch:
-    """A policy decision: one static batch per member lane, executed as
-    one array pass (solo for a single lane, a shared-array composite for
-    several)."""
+    """A policy decision: one batch per member lane, executed as one
+    array pass (solo for a single lane, a shared-array composite for
+    several).  ``batch`` is this dispatch's pad target — every member
+    lane's pull is padded to it; ``None`` means the server's static
+    batch (the pre-continuous behaviour)."""
     lanes: Tuple[LaneDispatch, ...]
+    batch: Optional[int] = None
 
     @property
     def composite(self) -> bool:
@@ -73,12 +90,16 @@ class Dispatch:
 @dataclasses.dataclass(frozen=True)
 class PolicyContext:
     """Everything a policy may consult, bound once by the server."""
-    batch: int                                  # static dispatch size
+    batch: int                                  # max/static dispatch size
     lanes: Tuple[str, ...]                      # queue lanes (RR order)
     variants: Dict[str, Tuple[str, ...]]        # lane -> its variants
     programs: Dict[str, isa.Program]            # variant -> ISA program
     reports: Dict[str, energy.NetReport]        # variant -> chip model
     groups: Dict[str, Tuple[str, ...]]          # lane -> shared group
+    quantum: int = 1                            # dispatch sizes must be
+                                                # multiples of this (the
+                                                # serve mesh device count)
+    clock: Any = time.perf_counter              # the server's clock
 
 
 class DispatchPolicy:
@@ -94,17 +115,32 @@ class DispatchPolicy:
     def __init__(self) -> None:
         self.ctx: Optional[PolicyContext] = None
         self.variant_dispatches: Dict[str, int] = {}
+        self.flush = False              # drain mode: never hold frames back
 
     def bind(self, ctx: PolicyContext) -> None:
         self.ctx = ctx
         self.variant_dispatches = {v: 0 for v in ctx.programs}
+        self.flush = False
         self._bound()
 
     def _bound(self) -> None:       # subclass hook
         pass
 
+    def set_flush(self, flush: bool) -> None:
+        """Drain mode: a flushing policy must dispatch whatever is queued
+        rather than wait for its window/deadline conditions."""
+        self.flush = flush
+
     def select(self, queue: FrameQueue) -> Optional[Dispatch]:
         raise NotImplementedError
+
+    def select_sized(self, queue: FrameQueue,
+                     size: int) -> Optional[Dispatch]:
+        """Like :meth:`select` but with the dispatch pad target forced to
+        ``size`` (the continuous layer's autoscaled batch).  Policies that
+        support batch autoscaling override; the base implementation
+        ignores ``size`` and keeps the static batch."""
+        return self.select(queue)
 
     def _count(self, dispatch: Dispatch) -> Dispatch:
         for ld in dispatch.lanes:
@@ -144,7 +180,11 @@ class StaticPolicy(DispatchPolicy):
     name = "static"
 
     def select(self, queue: FrameQueue) -> Optional[Dispatch]:
-        pulled = queue.next_batch_shared(self.ctx.batch, self.ctx.groups)
+        return self.select_sized(queue, self.ctx.batch)
+
+    def select_sized(self, queue: FrameQueue,
+                     size: int) -> Optional[Dispatch]:
+        pulled = queue.next_batch_shared(size, self.ctx.groups)
         if pulled is None:
             return None
         if len(pulled) > 1:
@@ -156,7 +196,8 @@ class StaticPolicy(DispatchPolicy):
         else:
             (name, reqs), = pulled.items()
             lanes = (LaneDispatch(name, name, tuple(reqs)),)
-        return self._count(Dispatch(lanes))
+        batch = None if size == self.ctx.batch else size
+        return self._count(Dispatch(lanes, batch=batch))
 
 
 class OperatingPointPolicy(DispatchPolicy):
@@ -195,30 +236,33 @@ class OperatingPointPolicy(DispatchPolicy):
         self.chip_time_s = 0.0
         self._backlog_high = (self.backlog_high if self.backlog_high
                               is not None else 4 * ctx.batch)
-        # variants energy-descending per lane; one full static batch of
-        # variant v costs e[v] uJ and t[v] seconds of chip time
-        self._e = {v: ctx.batch * r.i2l_energy_per_inference * 1e6
-                   for v, r in ctx.reports.items()}
-        self._t = {v: ctx.batch / r.inferences_per_s
-                   for v, r in ctx.reports.items()}
+        # variants energy-descending per lane; one frame of variant v
+        # costs e1[v] uJ and t1[v] seconds of chip time — a dispatch of
+        # n frames commits n * e1 / n * t1, so variable-size dispatches
+        # bill exactly what they run
+        self._e1 = {v: r.i2l_energy_per_inference * 1e6
+                    for v, r in ctx.reports.items()}
+        self._t1 = {v: 1.0 / r.inferences_per_s
+                    for v, r in ctx.reports.items()}
         self._order = {
-            lane: tuple(sorted(vs, key=lambda v: -self._e[v]))
+            lane: tuple(sorted(vs, key=lambda v: -self._e1[v]))
             for lane, vs in ctx.variants.items()}
 
     def variant_order(self, lane: str) -> Tuple[str, ...]:
         return self._order[lane]
 
-    def _choose(self, lane: str, pending: int,
+    def _choose(self, lane: str, pending: int, size: int,
                 spent: float, time: float) -> str:
-        """Most accurate affordable variant for ``lane``, given committed
-        totals ``(spent, time)``; backlog pressure downshifts one more
-        step; the cheapest variant is the unconditional floor."""
+        """Most accurate affordable variant for ``lane`` at dispatch size
+        ``size``, given committed totals ``(spent, time)``; backlog
+        pressure downshifts one more step; the cheapest variant is the
+        unconditional floor."""
         order = self._order[lane]
         idx = len(order) - 1                      # floor: cheapest
         for i, v in enumerate(order):
             if self.budget_uj_s is None or (
-                    (spent + self._e[v])
-                    <= self.budget_uj_s * (time + self._t[v])):
+                    (spent + size * self._e1[v])
+                    <= self.budget_uj_s * (time + size * self._t1[v])):
                 idx = i
                 break
         if pending >= self._backlog_high:
@@ -226,18 +270,21 @@ class OperatingPointPolicy(DispatchPolicy):
         return order[idx]
 
     def select(self, queue: FrameQueue) -> Optional[Dispatch]:
+        return self.select_sized(queue, self.ctx.batch)
+
+    def select_sized(self, queue: FrameQueue,
+                     size: int) -> Optional[Dispatch]:
         lane = queue.first_backlogged()
         if lane is None:
             return None
         queue.advance_past(lane)
-        batch = self.ctx.batch
         spent, time = self.spent_uj, self.chip_time_s
 
-        head = self._choose(lane, queue.pending(lane), spent, time)
+        head = self._choose(lane, queue.pending(lane), size, spent, time)
         picks = [(lane, head)]
         occ = 1.0 / self.ctx.programs[head].s
-        spent += self._e[head]
-        time += self._t[head]
+        spent += size * self._e1[head]
+        time += size * self._t1[head]
 
         if self.shared and occ < 1.0 - 1e-9:
             # riders: other backlogged lanes whose chosen variants fill
@@ -245,22 +292,140 @@ class OperatingPointPolicy(DispatchPolicy):
             for other in queue.rr_lanes():
                 if other == lane or not queue.pending(other):
                     continue
-                v = self._choose(other, queue.pending(other), spent, time)
+                v = self._choose(other, queue.pending(other), size,
+                                 spent, time)
                 w = 1.0 / self.ctx.programs[v].s
                 if occ + w > 1.0 + 1e-9:
                     continue
                 picks.append((other, v))
                 occ += w
-                spent += self._e[v]
-                time += self._t[v]
+                spent += size * self._e1[v]
+                time += size * self._t1[v]
                 if occ >= 1.0 - 1e-9:
                     break
             if occ < 1.0 - 1e-9 and len(picks) > 1:
                 picks = picks[:1]                 # no exact tiling: solo
-                spent = self.spent_uj + self._e[head]
-                time = self.chip_time_s + self._t[head]
+                spent = self.spent_uj + size * self._e1[head]
+                time = self.chip_time_s + size * self._t1[head]
 
         self.spent_uj, self.chip_time_s = spent, time
-        lanes = tuple(LaneDispatch(l, v, tuple(queue.take(l, batch)))
+        lanes = tuple(LaneDispatch(l, v, tuple(queue.take(l, size)))
                       for l, v in picks)
-        return self._count(Dispatch(lanes))
+        batch = None if size == self.ctx.batch else size
+        return self._count(Dispatch(lanes, batch=batch))
+
+
+class ContinuousPolicy(DispatchPolicy):
+    """Rolling/continuous batching: an SLO-bounded admission window.
+
+    Instead of padding every dispatch to the fixed lane batch, the head
+    lane's frames are admitted into an in-flight window and dispatched
+    when one of three things happens:
+
+    * the window reaches its *target size* — ``ceil(rate * slo_s *
+      headroom)`` frames, the number the lane's EWMA arrival rate is
+      expected to deliver inside the SLO budget (clamped to
+      ``[min_batch, ctx.batch]``);
+    * the oldest queued frame's **deadline approaches** — its queueing
+      delay exceeds ``slo_s * deadline_frac`` — and the dispatcher
+      launches early-and-small rather than blow the SLO waiting to fill
+      the pad;
+    * the server is **flushing** (drain), which disables waiting
+      entirely.
+
+    The dispatch size is then quantised up onto a bucket ladder
+    ``{q, 2q, 4q, ... ctx.batch}`` (``q = ctx.quantum``, the serve mesh
+    device count) so the executor's jit cache stays bounded at
+    ``log2(batch)`` entries per program and the autotune cache's
+    nearest-batch tile lookup covers every size.
+
+    *What* runs the frames is delegated to ``inner`` (default
+    :class:`StaticPolicy`): the operating-point controller autoscales
+    the **variant**, this layer autoscales the **batch** — composition,
+    not replacement.  ``variant_dispatches`` is shared with the inner
+    policy so accounting (and ``downshift_ratio``) reflects what ran.
+
+    Unstamped requests (``t_submit == 0``) carry no deadline, so they
+    dispatch immediately — replay-style callers that never stamp get
+    static-like behaviour at size ``min(pending, batch)``.
+    """
+
+    name = "continuous"
+
+    def __init__(self, slo_ms: float = 50.0, min_batch: int = 1,
+                 headroom: float = 0.5, deadline_frac: float = 0.5,
+                 inner: Optional[DispatchPolicy] = None) -> None:
+        super().__init__()
+        if slo_ms <= 0:
+            raise ValueError(f"slo_ms must be positive, got {slo_ms}")
+        if min_batch < 1:
+            raise ValueError(f"min_batch must be >= 1, got {min_batch}")
+        if not 0.0 < headroom <= 1.0:
+            raise ValueError(f"headroom must be in (0, 1], got {headroom}")
+        if not 0.0 <= deadline_frac <= 1.0:
+            raise ValueError(
+                f"deadline_frac must be in [0, 1], got {deadline_frac}")
+        self.slo_ms = slo_ms
+        self.min_batch = min_batch
+        self.headroom = headroom
+        self.deadline_frac = deadline_frac
+        self.inner = inner if inner is not None else StaticPolicy()
+
+    def _bound(self) -> None:
+        self.inner.bind(self.ctx)
+        # one shared accounting dict: the inner policy does the counting
+        # (it builds every Dispatch), this layer reads the same totals
+        self.variant_dispatches = self.inner.variant_dispatches
+        q = max(1, self.ctx.quantum)
+        ladder = []
+        s = q
+        while s < self.ctx.batch:
+            ladder.append(s)
+            s *= 2
+        ladder.append(self.ctx.batch)
+        self._ladder = tuple(ladder)
+
+    def set_flush(self, flush: bool) -> None:
+        super().set_flush(flush)
+        self.inner.set_flush(flush)
+
+    def variant_order(self, lane: str) -> Tuple[str, ...]:
+        return self.inner.variant_order(lane)
+
+    def downshift_ratio(self) -> float:
+        return self.inner.downshift_ratio()
+
+    def _bucket(self, n: int) -> int:
+        """Smallest ladder size >= n (the pad is billed, so round up as
+        little as possible)."""
+        for s in self._ladder:
+            if s >= n:
+                return s
+        return self._ladder[-1]
+
+    def _target(self, rate: float) -> int:
+        """Window target: how many frames the lane's arrival rate should
+        deliver within ``headroom`` of the SLO budget."""
+        if rate <= 0.0:
+            return self.min_batch
+        want = math.ceil(rate * (self.slo_ms / 1e3) * self.headroom)
+        return max(self.min_batch, min(want, self.ctx.batch))
+
+    def select(self, queue: FrameQueue) -> Optional[Dispatch]:
+        lane = queue.first_backlogged()
+        if lane is None:
+            return None
+        pending = queue.pending(lane)
+        if not self.flush:
+            target = self._target(queue.arrival_rate(lane))
+            oldest = queue.oldest_submit(lane)
+            if oldest is None:
+                deadline_near = True      # unstamped: no deadline to wait on
+            else:
+                waited = self.ctx.clock() - oldest
+                deadline_near = waited >= (
+                    self.slo_ms / 1e3) * self.deadline_frac
+            if pending < target and not deadline_near:
+                return None               # keep the window open
+        size = self._bucket(min(pending, self.ctx.batch))
+        return self.inner.select_sized(queue, size)

@@ -21,6 +21,14 @@ The primitives a policy composes:
 :meth:`next_batch` and :meth:`next_batch_shared` are the two canonical
 compositions (solo round-robin, and PR 4's shared-array pull); the
 static dispatch policy is built on them.
+
+For latency-aware policies the queue additionally keeps two per-lane
+signals, both derived purely from submission (no wall-clock reads of its
+own): an EWMA **arrival-rate estimate** (:class:`EwmaRate`, updated from
+each request's ``t_submit`` stamp) and the **oldest queued timestamp**
+(:meth:`oldest_submit` — the admission deadline anchor).  Requests
+without a timestamp (``t_submit == 0``) leave both signals untouched, so
+pure-Python scheduling tests keep working unchanged.
 """
 
 from __future__ import annotations
@@ -40,6 +48,8 @@ class FrameRequest:
     rid: int                  # server-global request id (arrival order)
     program: str              # lane name (resident program or family)
     frame: Any                # (H, W, C) integer image
+    t_submit: float = 0.0     # admission timestamp (server clock; 0 =
+                              # unstamped, latency accounting skips it)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +62,45 @@ class FrameResult:
     variant: str = ""         # resident program that actually ran it (==
                               # program for static lanes; a family lane's
                               # controller-chosen operating point)
+    t_submit: float = 0.0     # admission timestamp carried from the request
+    t_done: float = 0.0       # label available on the host (same clock)
+
+    @property
+    def latency_s(self) -> float:
+        """Input-to-label latency; 0.0 when the request was unstamped."""
+        if self.t_submit <= 0.0 or self.t_done <= 0.0:
+            return 0.0
+        return self.t_done - self.t_submit
+
+
+class EwmaRate:
+    """EWMA arrival-rate estimator over inter-arrival gaps.
+
+    ``observe(t)`` feeds one arrival timestamp; :attr:`rate` is
+    ``1 / ewma(dt)`` in arrivals/s, 0.0 until two timestamped arrivals
+    have been seen.  Non-positive gaps (clock ties, unstamped requests
+    replayed at t=0) are skipped so the estimate only ever reflects real
+    spacing.  Purely deterministic given the observation sequence.
+    """
+
+    def __init__(self, alpha: float = 0.2):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._last: Optional[float] = None
+        self._dt: Optional[float] = None
+
+    def observe(self, t: float) -> None:
+        if self._last is not None:
+            dt = t - self._last
+            if dt > 0.0:
+                self._dt = (dt if self._dt is None
+                            else self.alpha * dt + (1 - self.alpha) * self._dt)
+        self._last = t
+
+    @property
+    def rate(self) -> float:
+        return 1.0 / self._dt if self._dt else 0.0
 
 
 class FrameQueue:
@@ -78,6 +127,8 @@ class FrameQueue:
             raise ValueError(f"duplicate program names: {self._order}")
         self._lanes: Dict[str, collections.deque] = {
             name: collections.deque() for name in self._order}
+        self._rates: Dict[str, EwmaRate] = {
+            name: EwmaRate() for name in self._order}
         self._rr = 0
 
     def submit(self, req: FrameRequest) -> None:
@@ -85,6 +136,8 @@ class FrameQueue:
             raise KeyError(
                 f"program {req.program!r} not resident "
                 f"(have {self._order})")
+        if req.t_submit > 0.0:
+            self._rates[req.program].observe(req.t_submit)
         self._lanes[req.program].append(req)
 
     def pending(self, program: Optional[str] = None) -> int:
@@ -112,6 +165,20 @@ class FrameQueue:
             if self._lanes[name]:
                 return name
         return None
+
+    def arrival_rate(self, lane: str) -> float:
+        """EWMA arrival rate for ``lane`` in frames/s (0.0 until two
+        timestamped submissions have been observed)."""
+        return self._rates[lane].rate
+
+    def oldest_submit(self, lane: str) -> Optional[float]:
+        """``t_submit`` of the lane's head request — the deadline anchor
+        for SLO-aware dispatch.  ``None`` when the lane is empty or its
+        head request is unstamped."""
+        q = self._lanes[lane]
+        if not q or q[0].t_submit <= 0.0:
+            return None
+        return q[0].t_submit
 
     def take(self, lane: str, capacity: int) -> List[FrameRequest]:
         """Pop up to ``capacity`` requests from ``lane`` (FIFO); the

@@ -19,6 +19,7 @@ from :mod:`repro.serving` (or the specific submodule) directly.
 
 from repro.serving.executor import Executor  # noqa: F401
 from repro.serving.policy import (  # noqa: F401
+    ContinuousPolicy,
     Dispatch,
     DispatchPolicy,
     LaneDispatch,

@@ -38,8 +38,9 @@ import numpy as np
 
 from repro.core.chip import energy, interpreter, isa
 from repro.serving.executor import Executor
-from repro.serving.policy import (DispatchPolicy, OperatingPointPolicy,
-                                  PolicyContext, StaticPolicy)
+from repro.serving.policy import (ContinuousPolicy, DispatchPolicy,
+                                  OperatingPointPolicy, PolicyContext,
+                                  StaticPolicy)
 from repro.serving.queue import (FrameQueue, FrameRequest, FrameResult,
                                  plan_shared_groups)
 
@@ -63,6 +64,10 @@ class ServeStats:
     budget_uj_s: Optional[float] = None
     downshift_ratio: float = 0.0      # family dispatches served below the
                                       # top operating point
+    p50_ms: float = 0.0               # input-to-label latency percentiles
+    p95_ms: float = 0.0               # over timestamped frames (0.0 when
+    p99_ms: float = 0.0               # nothing was stamped)
+    padding_ratio: float = 0.0        # burned slots / billed slots
 
     @property
     def total_served(self) -> int:
@@ -100,7 +105,9 @@ class ChipServer:
                  policy: Optional[DispatchPolicy | str] = None,
                  families: Optional[Mapping[str, Sequence[str]]] = None,
                  budget_uj_s: Optional[float] = None,
-                 f_hz: float = energy.F_EMIN):
+                 f_hz: float = energy.F_EMIN,
+                 slo_ms: float = 50.0,
+                 clock=time.perf_counter):
         if set(programs) != set(artifacts):
             raise ValueError(
                 f"programs {sorted(programs)} != artifacts {sorted(artifacts)}")
@@ -118,6 +125,8 @@ class ChipServer:
         self.f_hz = f_hz
         self.prefetch = int(prefetch)        # pipeline depth, 0 = sync
         self.shared = shared
+        self.slo_ms = slo_ms
+        self.clock = clock                   # injectable for latency tests
         self.programs: Dict[str, isa.Program] = dict(programs)
 
         # -- lanes: families collapse their variants behind one lane -------
@@ -155,7 +164,7 @@ class ChipServer:
         self.executor = Executor(self.programs, artifacts, batch=batch,
                                  mesh=mesh, donate_frames=donate_frames,
                                  interpret=interpret, megakernel=megakernel,
-                                 prefetch=self.prefetch)
+                                 prefetch=self.prefetch, clock=clock)
         self.plans = self.executor.plans
         self.artifacts = self.executor.artifacts
         self.queue = FrameQueue(self._lanes)
@@ -181,7 +190,7 @@ class ChipServer:
             batch=batch, lanes=self._lanes,
             variants=dict(self._lane_variants),
             programs=dict(self.programs), reports=dict(self._reports),
-            groups=groups))
+            groups=groups, quantum=ndev, clock=clock))
 
         # -- accounting -----------------------------------------------------
         self._next_rid = 0
@@ -193,6 +202,10 @@ class ChipServer:
         self._vserved = {name: 0 for name in self.programs}
         self._vpadded = {name: 0 for name in self.programs}
         self._host_wall_s = 0.0
+        self._billed = 0                     # frame slots launched (served
+                                             # + padded, across all lanes)
+        self._latencies: List[float] = []    # stamped input-to-label, s
+        self._trace: List[Dict[str, Any]] = []   # per-frame latency trace
 
     def _make_policy(self, policy, budget_uj_s) -> DispatchPolicy:
         if isinstance(policy, DispatchPolicy):
@@ -208,8 +221,14 @@ class ChipServer:
         if policy == "operating-point":
             return OperatingPointPolicy(budget_uj_s=budget_uj_s,
                                         shared=self.shared)
+        if policy == "continuous":
+            inner = (OperatingPointPolicy(budget_uj_s=budget_uj_s,
+                                          shared=self.shared)
+                     if self._families else StaticPolicy())
+            return ContinuousPolicy(slo_ms=self.slo_ms, inner=inner)
         raise ValueError(f"unknown policy {policy!r} (have 'static', "
-                         "'operating-point', or a DispatchPolicy)")
+                         "'operating-point', 'continuous', or a "
+                         "DispatchPolicy)")
 
     @property
     def shared_groups(self) -> Tuple[Tuple[str, ...], ...]:
@@ -223,9 +242,12 @@ class ChipServer:
 
     # -- request side -------------------------------------------------------
 
-    def submit(self, program: str, frame) -> int:
+    def submit(self, program: str, frame,
+               t_submit: Optional[float] = None) -> int:
         """Enqueue one frame on a lane (program or family name); returns
-        its request id (arrival order)."""
+        its request id (arrival order).  ``t_submit`` overrides the
+        admission timestamp (trace replay stamps the trace's arrival
+        time); by default the server clock stamps *now*."""
         if program not in self._geom:
             raise KeyError(
                 f"program {program!r} not resident "
@@ -238,7 +260,10 @@ class ChipServer:
                 f"got {frame.shape}")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.submit(FrameRequest(rid=rid, program=program, frame=frame))
+        if t_submit is None:
+            t_submit = self.clock()
+        self.queue.submit(FrameRequest(rid=rid, program=program, frame=frame,
+                                       t_submit=t_submit))
         return rid
 
     def submit_many(self, program: str, frames) -> List[int]:
@@ -256,13 +281,15 @@ class ChipServer:
         index = self._dispatches
         self._dispatches += 1
         handle = self.executor.launch(dispatch, index)
+        size = dispatch.batch if dispatch.batch is not None else self.batch
         live = []
         for ld in dispatch.lanes:
             n = len(ld.requests)
             self._served[ld.lane] += n
-            self._padded[ld.lane] += self.batch - n
+            self._padded[ld.lane] += size - n
             self._vserved[ld.variant] += n
-            self._vpadded[ld.variant] += self.batch - n
+            self._vpadded[ld.variant] += size - n
+            self._billed += size
             if n:
                 live.append(self.programs[ld.variant])
         if dispatch.composite:
@@ -285,18 +312,34 @@ class ChipServer:
         """
         t0 = time.perf_counter()
         try:
-            return self.executor.step(self._launch)
+            results = self.executor.step(self._launch)
         finally:
             self._host_wall_s += time.perf_counter() - t0
+        for r in results:
+            if r.t_submit <= 0.0 or r.t_done <= 0.0:
+                continue                     # unstamped: no latency account
+            lat = r.t_done - r.t_submit
+            self._latencies.append(lat)
+            self._trace.append(dict(
+                rid=r.rid, lane=r.program, variant=r.variant,
+                dispatch=r.dispatch, t_submit=r.t_submit,
+                t_done=r.t_done, latency_ms=lat * 1e3))
+        return results
 
     def drain(self) -> List[FrameResult]:
-        """Serve until the queue is empty; results in dispatch order."""
+        """Serve until the queue is empty; results in dispatch order.
+        The policy is flushed for the duration: a continuous policy's
+        admission window never holds the final ragged batches back."""
         out: List[FrameResult] = []
-        while True:
-            got = self.step()
-            if not got:
-                return out
-            out.extend(got)
+        self.policy.set_flush(True)
+        try:
+            while True:
+                got = self.step()
+                if not got and not len(self.queue):
+                    return out
+                out.extend(got)
+        finally:
+            self.policy.set_flush(False)
 
     def close(self) -> None:
         """Release the background fetch thread, syncing (and discarding —
@@ -307,10 +350,35 @@ class ChipServer:
 
     # -- accounting ---------------------------------------------------------
 
+    def reset_stats(self) -> None:
+        """Zero the serving counters and latency books, keeping all
+        compiled state — benches warm the jit caches through the real
+        serve path, then measure from a clean ledger."""
+        self._dispatches = 0
+        self._shared_dispatches = 0
+        self._util_sum = 0.0
+        self._served = {lane: 0 for lane in self._lanes}
+        self._padded = {lane: 0 for lane in self._lanes}
+        self._vserved = {name: 0 for name in self.programs}
+        self._vpadded = {name: 0 for name in self.programs}
+        self._host_wall_s = 0.0
+        self._billed = 0
+        self._latencies = []
+        self._trace = []
+        for v in self.policy.variant_dispatches:
+            self.policy.variant_dispatches[v] = 0
+
+    def latency_trace(self) -> List[Dict[str, Any]]:
+        """Per-frame admission-to-label records (stamped frames only), in
+        completion order — the artifact CI uploads next to the bench
+        JSON."""
+        return list(self._trace)
+
     def stats(self) -> ServeStats:
         chip = energy.serve_report(self.programs, self._vserved,
                                    self._vpadded, f_hz=self.f_hz,
-                                   reports=self._reports)
+                                   reports=self._reports,
+                                   billed=self._billed)
         total = sum(self._served.values())
         fps = total / self._host_wall_s if self._host_wall_s else 0.0
         util = self._util_sum / self._dispatches if self._dispatches else 0.0
@@ -320,6 +388,12 @@ class ChipServer:
             for v in self.programs)
         budget = getattr(self.policy, "budget_uj_s", None)
         vd = dict(self.policy.variant_dispatches)
+        if self._latencies:
+            p50, p95, p99 = np.percentile(self._latencies, [50, 95, 99])
+        else:
+            p50 = p95 = p99 = 0.0
+        padded = sum(self._padded.values())
+        ratio = padded / self._billed if self._billed else 0.0
         return ServeStats(served=dict(self._served),
                           padded=dict(self._padded),
                           dispatches=self._dispatches,
@@ -332,4 +406,8 @@ class ChipServer:
                           variant_dispatches=vd,
                           energy_uj=energy_uj,
                           budget_uj_s=budget,
-                          downshift_ratio=self.policy.downshift_ratio())
+                          downshift_ratio=self.policy.downshift_ratio(),
+                          p50_ms=float(p50) * 1e3,
+                          p95_ms=float(p95) * 1e3,
+                          p99_ms=float(p99) * 1e3,
+                          padding_ratio=ratio)

@@ -5,8 +5,8 @@ real hypothesis package may be missing.  Rather than skipping the five
 property-test modules wholesale (losing their parametrized cases too),
 we install a minimal deterministic stand-in that supports exactly the
 subset these tests use: ``@given`` with ``st.integers`` /
-``st.sampled_from`` strategies and ``@settings(max_examples=...,
-deadline=...)``.  Each property test then runs against a fixed
+``st.sampled_from`` / ``st.booleans`` / ``st.lists`` strategies and
+``@settings(max_examples=..., deadline=...)``.  Each property test then runs against a fixed
 pseudo-random sample of examples (seeded per test name, so failures
 reproduce).  With the real package installed (see requirements-dev.txt)
 this file is a no-op.
@@ -39,6 +39,11 @@ def _install_hypothesis_stub() -> None:
     def booleans():
         return _Strategy(lambda rng: bool(rng.randrange(2)))
 
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(
+            lambda rng: [elements.sample(rng)
+                         for _ in range(rng.randint(min_size, max_size))])
+
     def given(**strategies):
         def deco(fn):
             def wrapper(*args, **kwargs):
@@ -69,6 +74,7 @@ def _install_hypothesis_stub() -> None:
     st_mod.integers = integers
     st_mod.sampled_from = sampled_from
     st_mod.booleans = booleans
+    st_mod.lists = lists
     mod.strategies = st_mod
     sys.modules["hypothesis"] = mod
     sys.modules["hypothesis.strategies"] = st_mod

@@ -27,9 +27,10 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.chip import energy, interpreter, networks
-from repro.serving import (ChipServer, DispatchPolicy, FrameQueue,
-                           FrameRequest, OperatingPointPolicy, PolicyContext,
-                           StaticPolicy, plan_shared_groups)
+from repro.serving import (ChipServer, ContinuousPolicy, DispatchPolicy,
+                           FrameQueue, FrameRequest, OperatingPointPolicy,
+                           PolicyContext, StaticPolicy, VirtualClock,
+                           plan_shared_groups)
 
 
 def _frames(program, n, seed=0):
@@ -194,6 +195,19 @@ def _make_policy(kind, batch):
         # feasible but tight: the floor mix is always affordable
         floor = min(r.power_w for r in ctx.reports.values()) * 1e6
         pol = OperatingPointPolicy(budget_uj_s=floor * 1.2, shared=True)
+    elif kind == "continuous":
+        # the fairness suite submits unstamped requests, so the window
+        # never holds (no deadline to wait on) — what's under test is the
+        # variable-size dispatch path through the shared-group mechanism
+        ctx = _static_context(batch)
+        pol = ContinuousPolicy(inner=StaticPolicy())
+    elif kind == "continuous-opp":
+        # the full composition: continuous window over the operating-
+        # point controller under a feasible energy budget
+        ctx = _family_context(batch)
+        floor = min(r.power_w for r in ctx.reports.values()) * 1e6
+        pol = ContinuousPolicy(
+            inner=OperatingPointPolicy(budget_uj_s=floor * 1.2, shared=True))
     else:
         ctx = _family_context(batch)
         pol = OperatingPointPolicy(shared=True, backlog_high=2 * batch)
@@ -202,7 +216,8 @@ def _make_policy(kind, batch):
 
 
 @settings(max_examples=12, deadline=None)
-@given(kind=st.sampled_from(["static", "opp", "opp-budget", "opp-shared"]),
+@given(kind=st.sampled_from(["static", "opp", "opp-budget", "opp-shared",
+                             "continuous", "continuous-opp"]),
        n_reqs=st.integers(4, 40), batch=st.integers(1, 4),
        seed=st.integers(0, 2 ** 16))
 def test_no_lane_starves_under_any_policy(kind, n_reqs, batch, seed):
@@ -341,6 +356,151 @@ def test_controller_composites_exact_tilings_only():
         queue.submit(FrameRequest(rid=0, program=lane, frame=None))
     d = pol.select(queue)
     assert len(d.lanes) == 1
+
+
+# ---------------------------------------------------------------------------
+# 3b. Continuous batching: window, deadline, buckets, composition
+# ---------------------------------------------------------------------------
+
+def _clocked_context(batch, clock, quantum=1):
+    import dataclasses as _dc
+    return _dc.replace(_static_context(batch), clock=clock, quantum=quantum)
+
+
+def test_continuous_holds_below_target_until_deadline():
+    """Stamped frames arriving fast enough to promise a fuller window are
+    HELD (select -> None) until the oldest frame has waited deadline_frac
+    of the SLO — then the dispatcher launches early and small."""
+    vc = VirtualClock(start=10.0)
+    ctx = _clocked_context(batch=4, clock=vc)
+    pol = ContinuousPolicy(slo_ms=100.0, headroom=0.5, deadline_frac=0.5)
+    pol.bind(ctx)
+    queue = FrameQueue(ctx.lanes)
+    # establish a high EWMA rate (~1000/s): target = ceil(1000*0.1*0.5)
+    # clamps to batch=4, so 2 pending < target -> hold
+    for rid in range(8):
+        vc.advance(0.001)
+        queue.submit(FrameRequest(rid=rid, program="a", frame=None,
+                                  t_submit=vc()))
+    queue.take("a", 6)                    # leave 2 pending, head freshly old
+    assert queue.pending("a") == 2
+    assert pol.select(queue) is None      # window open: below target, fresh
+    vc.advance(0.040)                     # well under the 50 ms deadline
+    assert pol.select(queue) is None
+    vc.advance(0.020)                     # past deadline_frac * slo
+    d = pol.select(queue)
+    assert d is not None
+    assert sum(len(ld.requests) for ld in d.lanes) == 2
+    assert d.batch == 2                   # early and small, not the pad-4
+
+
+def test_continuous_flush_dispatches_immediately():
+    """Drain mode disables the window entirely: a flushing policy never
+    holds frames, whatever the rate/deadline state says."""
+    vc = VirtualClock(start=5.0)
+    ctx = _clocked_context(batch=4, clock=vc)
+    pol = ContinuousPolicy(slo_ms=1e6)    # deadline effectively never
+    pol.bind(ctx)
+    queue = FrameQueue(ctx.lanes)
+    for rid in range(2):
+        vc.advance(0.001)
+        queue.submit(FrameRequest(rid=rid, program="a", frame=None,
+                                  t_submit=vc()))
+    assert pol.select(queue) is None      # held: huge SLO, tiny backlog
+    pol.set_flush(True)
+    d = pol.select(queue)
+    assert d is not None and sum(len(ld.requests) for ld in d.lanes) == 2
+    assert pol.inner.flush                # flush propagates to the inner
+    pol.set_flush(False)
+    assert not pol.inner.flush
+
+
+def test_continuous_bucket_ladder_quantises_to_device_multiples():
+    """Dispatch sizes land on the {q, 2q, 4q, ..., batch} ladder so every
+    launch shards evenly over the serve mesh and the jit cache stays at
+    log2(batch) shapes."""
+    vc = VirtualClock()
+    ctx = _clocked_context(batch=16, clock=vc, quantum=4)
+    pol = ContinuousPolicy()
+    pol.bind(ctx)
+    assert pol._ladder == (4, 8, 16)
+    queue = FrameQueue(ctx.lanes)
+    for rid in range(5):                  # 5 unstamped -> dispatch now
+        queue.submit(FrameRequest(rid=rid, program="owner", frame=None))
+    d = pol.select(queue)
+    assert sum(len(ld.requests) for ld in d.lanes) == 5
+    assert d.batch == 8                   # 5 rounds up to the next bucket
+
+
+def test_continuous_target_scales_with_rate():
+    """The window target tracks the EWMA arrival rate: ceil(rate * slo *
+    headroom), clamped to [min_batch, batch]."""
+    pol = ContinuousPolicy(slo_ms=50.0, headroom=0.5, min_batch=1)
+    pol.bind(_static_context(batch=8))
+    assert pol._target(0.0) == 1          # no rate yet: launch singles
+    assert pol._target(100.0) == 3        # ceil(100 * 0.05 * 0.5)
+    assert pol._target(10_000.0) == 8     # clamped to the lane batch
+
+
+def test_continuous_rejects_bad_parameters():
+    for bad in (dict(slo_ms=0.0), dict(slo_ms=-1.0), dict(min_batch=0),
+                dict(headroom=0.0), dict(headroom=1.5),
+                dict(deadline_frac=-0.1), dict(deadline_frac=1.1)):
+        with pytest.raises(ValueError):
+            ContinuousPolicy(**bad)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n_reqs=st.integers(4, 40), batch=st.integers(1, 4),
+       budget_scale_pct=st.integers(100, 300), shared=st.booleans(),
+       seed=st.integers(0, 2 ** 16))
+def test_composed_controller_respects_budget_across_window_sizes(
+        n_reqs, batch, budget_scale_pct, shared, seed):
+    """The budget property survives composition: with the continuous
+    layer picking variable dispatch sizes, the inner controller's
+    committed energy still never exceeds budget * chip time by more than
+    one dispatch's energy (sizes are <= batch, so the same slack bound
+    applies)."""
+    ctx = _family_context(batch)
+    floor = min(r.power_w for r in ctx.reports.values()) * 1e6
+    budget = floor * budget_scale_pct / 100.0
+    inner = OperatingPointPolicy(budget_uj_s=budget, shared=shared)
+    pol = ContinuousPolicy(inner=inner)
+    pol.bind(ctx)
+    max_e = max(batch * r.i2l_energy_per_inference * 1e6
+                for r in ctx.reports.values())
+    rng = random.Random(seed)
+    queue = FrameQueue(ctx.lanes)
+    rid, to_submit = 0, n_reqs
+    while to_submit or queue.pending():
+        if to_submit and (rng.random() < 0.6 or not queue.pending()):
+            queue.submit(FrameRequest(rid=rid,
+                                      program=rng.choice(list(ctx.lanes)),
+                                      frame=None))
+            rid += 1
+            to_submit -= 1
+        else:
+            assert pol.select(queue) is not None
+            assert (inner.spent_uj
+                    <= budget * inner.chip_time_s + max_e + 1e-9), (
+                f"budget {budget:.0f} exceeded through the continuous "
+                f"layer: {inner.spent_uj:.0f} uJ in {inner.chip_time_s:.3f}s")
+
+
+def test_continuous_shares_accounting_with_inner():
+    """variant_dispatches is ONE dict: the inner policy counts, the outer
+    reports — downshift_ratio and ServeStats see the same totals."""
+    ctx = _family_context(batch=2)
+    pol = ContinuousPolicy(inner=OperatingPointPolicy(budget_uj_s=1e-6))
+    pol.bind(ctx)
+    assert pol.variant_dispatches is pol.inner.variant_dispatches
+    queue = FrameQueue(ctx.lanes)
+    for rid in range(4):
+        queue.submit(FrameRequest(rid=rid, program="cifar10", frame=None))
+    while pol.select(queue) is not None:
+        pass
+    assert pol.variant_dispatches["cifar9_s4t"] > 0   # floor-pinned
+    assert pol.downshift_ratio() == 1.0               # read through outer
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,231 @@
+"""Traffic generation + replay: determinism, serialization, end-to-end.
+
+Locks down the measurement side of continuous batching:
+
+1. **Determinism** — every generator is a pure function of its seed and
+   parameters: same inputs, bit-identical trace, on any host.
+2. **Statistics** — realised mean rates land near the requested rate
+   (the traces are the bench's committed workload; a generator drifting
+   off its nominal rate would silently change the regression regime).
+3. **Serialization** — save/load round-trips exactly (CI re-derives the
+   committed bench trace from parameters; the JSON form is the escape
+   hatch for external traces).
+4. **Replay** — a VirtualClock replay through a real ChipServer is
+   deterministic, serves every frame bit-exactly, stamps t_submit with
+   the *due* time, and produces latency percentiles + a per-frame trace
+   in ServeStats.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.chip import interpreter, networks
+from repro.serving import (ChipServer, VirtualClock, bursty_trace,
+                           diurnal_trace, load_trace, make_trace,
+                           poisson_trace, replay, save_trace)
+from repro.serving.traffic import ArrivalTrace, TRAFFIC_KINDS
+
+
+def _make(kind, **kw):
+    args = dict(lanes=["a", "b"], rate=100.0, n=64, seed=7)
+    args.update(kw)
+    return make_trace(kind, args.pop("lanes"), args.pop("rate"),
+                      args.pop("n"), **args)
+
+
+# ---------------------------------------------------------------------------
+# 1. Determinism + basic shape
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", TRAFFIC_KINDS)
+def test_trace_deterministic_per_seed(kind):
+    a, b = _make(kind), _make(kind)
+    np.testing.assert_array_equal(a.t, b.t)
+    assert a.lane == b.lane
+    c = _make(kind, seed=8)
+    assert not np.array_equal(a.t, c.t)           # the seed matters
+
+
+@pytest.mark.parametrize("kind", TRAFFIC_KINDS)
+def test_trace_shape_and_ordering(kind):
+    tr = _make(kind)
+    assert len(tr) == 64 and len(tr.lane) == 64
+    assert tr.t[0] == 0.0                         # origin at first arrival
+    assert np.all(np.diff(tr.t) >= 0)             # sorted
+    assert set(tr.lane) <= {"a", "b"}
+    assert tr.kind == kind and tr.meta["rate"] == 100.0
+
+
+@pytest.mark.parametrize("kind", TRAFFIC_KINDS)
+def test_trace_mean_rate_near_nominal(kind):
+    """512 arrivals at nominal 100/s: the realised mean rate stays within
+    a loose statistical band (the diurnal envelope thins below nominal,
+    and the MMPP's per-arrival state flips weight time toward the calm
+    state, so both run below the raw Poisson rate)."""
+    tr = _make(kind, n=512)
+    lo = 60.0 if kind == "poisson" else 30.0
+    assert lo < tr.mean_rate < 160.0, tr.mean_rate
+
+
+def test_lane_weights_bias_the_spread():
+    tr = poisson_trace(["hot", "cold"], 100.0, 512, seed=3,
+                       weights=[0.9, 0.1])
+    hot = sum(1 for l in tr.lane if l == "hot")
+    assert hot > 400                              # ~460 expected
+
+
+def test_generator_validation():
+    with pytest.raises(ValueError, match="rate"):
+        poisson_trace(["a"], 0.0, 4)
+    with pytest.raises(ValueError, match="n must"):
+        poisson_trace(["a"], 10.0, 0)
+    with pytest.raises(ValueError, match="lane"):
+        poisson_trace([], 10.0, 4)
+    with pytest.raises(ValueError, match="weights"):
+        poisson_trace(["a", "b"], 10.0, 4, weights=[1.0])
+    with pytest.raises(ValueError, match="burst_factor"):
+        bursty_trace(["a"], 10.0, 4, burst_factor=0.5)
+    with pytest.raises(ValueError, match="transition"):
+        bursty_trace(["a"], 10.0, 4, p_enter=0.0)
+    with pytest.raises(ValueError, match="depth"):
+        diurnal_trace(["a"], 10.0, 4, depth=1.0)
+    with pytest.raises(ValueError, match="unknown traffic kind"):
+        make_trace("sawtooth", ["a"], 10.0, 4)
+    with pytest.raises(ValueError, match="sorted"):
+        ArrivalTrace(kind="poisson", seed=0,
+                     t=np.array([1.0, 0.5]), lane=("a", "a"))
+    with pytest.raises(ValueError, match="lane tags"):
+        ArrivalTrace(kind="poisson", seed=0,
+                     t=np.array([0.0, 0.5]), lane=("a",))
+
+
+# ---------------------------------------------------------------------------
+# 2. Serialization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", TRAFFIC_KINDS)
+def test_save_load_roundtrip(kind, tmp_path):
+    tr = _make(kind)
+    p = str(tmp_path / "trace.json")
+    save_trace(tr, p)
+    back = load_trace(p)
+    np.testing.assert_array_equal(back.t, tr.t)
+    assert back.lane == tr.lane
+    assert back.kind == tr.kind and back.seed == tr.seed
+    assert back.meta == tr.meta
+    with open(p) as f:                            # plain JSON, no pickles
+        assert set(json.load(f)) == {"kind", "seed", "t", "lane", "meta"}
+
+
+def test_saved_trace_regenerates_from_meta(tmp_path):
+    """The committed-parameters contract: a loaded trace's meta is enough
+    to regenerate the identical arrival sequence."""
+    tr = bursty_trace(["a", "b"], 200.0, 48, seed=11, burst_factor=4.0)
+    p = str(tmp_path / "t.json")
+    save_trace(tr, p)
+    back = load_trace(p)
+    m = dict(back.meta)
+    regen = make_trace(back.kind, m.pop("lanes"), m.pop("rate"),
+                       m.pop("n"), seed=back.seed,
+                       **{k: v for k, v in m.items() if v is not None
+                          and k != "weights"})
+    np.testing.assert_array_equal(regen.t, back.t)
+    assert regen.lane == back.lane
+
+
+# ---------------------------------------------------------------------------
+# 3. Replay end-to-end (VirtualClock: deterministic, no wall-clock waits)
+# ---------------------------------------------------------------------------
+
+def _artifact(program, seed=0):
+    params = interpreter.init_params(jax.random.PRNGKey(seed), program)
+    return interpreter.fold_params(params, program, packed=True)
+
+
+def _frames(program, n, seed=0):
+    io = program.instrs[0]
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n, io.height, io.width, io.in_channels),
+        0, 2 ** io.bits))
+
+
+@pytest.fixture(scope="module")
+def replay_setup():
+    program = networks.mnist5()
+    packed = _artifact(program, seed=2)
+    frames = _frames(program, 6, seed=9)
+    plan = interpreter.compile_plan(program)
+    _, labels = plan.forward(packed, frames, interpret=True)
+    return program, packed, frames, np.asarray(labels)
+
+
+def test_virtual_clock_replay_end_to_end(replay_setup):
+    """A Poisson trace replayed under a VirtualClock: every arrival is
+    served exactly once, labels bit-exact vs offline, t_submit stamped
+    with the due time, and ServeStats carries percentiles + the
+    per-frame latency trace."""
+    program, packed, frames, labels = replay_setup
+    tr = poisson_trace(["m"], rate=200.0, n=12, seed=5)
+    vc = VirtualClock(start=1.0)
+    server = ChipServer({"m": program}, {"m": packed}, batch=4,
+                        interpret=True, policy="continuous",
+                        slo_ms=20.0, clock=vc)
+    results = replay(server, tr, {"m": frames}, clock=vc, sleep=vc.sleep)
+
+    assert len(results) == len(tr)
+    assert [r.rid for r in results] == sorted(r.rid for r in results)
+    for i, r in enumerate(results):
+        assert r.label == labels[i % len(frames)]
+        assert r.t_submit == pytest.approx(1.0 + float(tr.t[i]))
+        assert r.t_done >= r.t_submit
+    stats = server.stats()
+    assert stats.served == {"m": len(tr)}
+    assert stats.p50_ms <= stats.p95_ms <= stats.p99_ms
+    assert 0.0 <= stats.padding_ratio < 1.0
+    trace = server.latency_trace()
+    assert len(trace) == len(tr)
+    assert all(t["latency_ms"] >= 0.0 for t in trace)
+
+
+def test_replay_is_deterministic_under_virtual_clock(replay_setup):
+    """Same trace + fresh VirtualClock twice: identical dispatch
+    structure and identical latency trace — the bench's paired
+    comparison rests on this."""
+    program, packed, frames, _ = replay_setup
+    tr = bursty_trace(["m"], rate=300.0, n=10, seed=21)
+
+    def run():
+        vc = VirtualClock(start=1.0)
+        server = ChipServer({"m": program}, {"m": packed}, batch=4,
+                            interpret=True, policy="continuous",
+                            slo_ms=10.0, clock=vc)
+        replay(server, tr, {"m": frames}, clock=vc, sleep=vc.sleep)
+        return server.latency_trace(), server.stats()
+
+    ta, sa = run()
+    tb, sb = run()
+    assert ta == tb
+    assert sa.dispatches == sb.dispatches
+    assert sa.p99_ms == sb.p99_ms
+
+
+def test_replay_speed_compresses_time(replay_setup):
+    """speed=k divides every inter-arrival gap: the virtual clock
+    advances ~k times less for the same trace."""
+    program, packed, frames, _ = replay_setup
+    tr = poisson_trace(["m"], rate=50.0, n=8, seed=4)
+    spans = []
+    for speed in (1.0, 4.0):
+        vc = VirtualClock(start=0.0)
+        server = ChipServer({"m": program}, {"m": packed}, batch=4,
+                            interpret=True, policy="continuous",
+                            slo_ms=100.0, clock=vc)
+        replay(server, tr, {"m": frames}, speed=speed,
+               clock=vc, sleep=vc.sleep)
+        spans.append(vc())
+    assert spans[1] < spans[0]
+    with pytest.raises(ValueError, match="speed"):
+        replay(None, tr, {}, speed=0.0)
