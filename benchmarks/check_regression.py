@@ -62,7 +62,8 @@ THROUGHPUT_KEYS = ("pipeline_frames_per_s", "serve_frames_per_s",
 # latency keys: LOWER is better — fail when the fresh run is more than
 # the tolerance ABOVE the committed baseline (host-gated like the
 # absolute frames/s keys)
-LATENCY_KEYS = ("serve_p99_ms", "serve_p99_ms_static")
+LATENCY_KEYS = ("serve_p99_ms", "serve_p99_ms_static",
+                "fleet_failover_recovery_ms")
 INVARIANT_FLOORS = {
     "megakernel_speedup_vs_staged": 1.0,
     "pipeline_fused_speedup": 1.0,
@@ -77,6 +78,10 @@ INVARIANT_FLOORS = {
     # on any host
     "serve_p99_speedup_vs_static": 1.0,
     "serve_energy_ratio_vs_static": 1.0,
+    # a replacement replica built through the warm-start cache must come
+    # up no slower than the cold build it replaces — a same-run paired
+    # ratio, so it holds on any host
+    "replica_warm_start_speedup": 1.0,
 }
 # cross-key invariants: (lhs, rhs) pairs where fresh[lhs] must stay
 # strictly below fresh[rhs] — the continuous admission window must burn

@@ -759,6 +759,81 @@ def _bench_controller(results):
     return ok
 
 
+def _bench_fleet(results):
+    """Fleet failover + warm start on the wall clock.
+
+    Two tracked numbers: ``replica_warm_start_speedup`` — bring-up time
+    (construct a server AND serve its first batch, i.e. cold-start-to-
+    first-served-frame) of a cold warm-start cache vs a hot one (floor
+    >= 1.0 in ``check_regression.py``); and ``fleet_failover_recovery_ms``
+    — kill-to-first-served-frame of the replacement replica a 2-host
+    fleet spawns after a mid-stream host loss (lower-is-better latency
+    key).  Zero frame loss and bit-exact labels vs the offline oracle
+    are the pass condition."""
+    from repro.kernels import cache as warmcache
+    from repro.launch import chip_serve
+    from repro.serving import ChipServer, FaultInjector, ServeFleet
+
+    batch, n_frames = 4, 32
+    prog = networks.mnist5()
+    art = chip_serve.build_artifact(prog, seed=30, warm_bn=True)
+    frames = chip_serve.frame_stream(prog, n_frames, seed=40)
+    plan = interpreter.compile_plan(prog)
+    oracle = np.asarray(jax.jit(
+        lambda pk, im: plan.forward(pk, im)[1])(art, jnp.asarray(frames)))
+    warm_dir = warmcache.enable_persistent()   # CI uploads the directory
+
+    def bring_up():
+        t0 = time.perf_counter()
+        server = ChipServer({"mnist5": prog}, {"mnist5": art}, batch=batch)
+        server.submit_many("mnist5", frames[:batch])
+        server.drain()
+        return time.perf_counter() - t0
+
+    warmcache.invalidate()                     # measure a true cold start
+    t_cold = bring_up()
+    t_warm = min(bring_up() for _ in range(3))
+    speedup = t_cold / t_warm
+
+    # -- failover: kill host0 mid-stream, replacement must serve -----------
+    inj = FaultInjector("host0", after_served=batch)
+    fleet = ServeFleet({"mnist5": prog}, {"mnist5": art},
+                       replicas=2, batch=batch, injector=inj, replace=True)
+    res = []
+    for i in range(0, n_frames, batch):        # interleave admit/serve so
+        for f in frames[i:i + batch]:          # the kill lands mid-stream
+            fleet.submit("mnist5", f)          # and the replacement gets
+        res.extend(fleet.step())               # fresh traffic
+    res.extend(fleet.drain())
+    st = fleet.stats()
+    got = {r.rid: r.label for r in res}
+    ok = (len(got) == n_frames
+          and all(got[i] == int(oracle[i]) for i in range(n_frames))
+          and st.billed == st.total_served + sum(st.padded.values())
+          and st.failed_replicas == ("host0",)
+          and fleet.recovery_ms is not None)
+    recovery_ms = fleet.recovery_ms if fleet.recovery_ms is not None else -1.0
+
+    print(f"\n== Serve fleet (2 hosts, batch={batch}, kill host0 "
+          f"after {batch} frames) ==")
+    print(f"bring-up           : cold {t_cold*1e3:.0f} ms, warm "
+          f"{t_warm*1e3:.0f} ms -> {speedup:.2f}x warm-start speedup")
+    print(f"failover           : recovery {recovery_ms:.1f} ms, "
+          f"{st.migrated_frames} migrated (+{st.refired_frames} refired), "
+          f"{len(got)}/{n_frames} served, bit-exact={ok}")
+    print(f"fleet bill         : {st.chip.uj_per_frame:.3f} uJ/frame, "
+          f"billed {st.billed} == served {st.total_served} + padded "
+          f"{sum(st.padded.values())}")
+    results["fleet_failover_recovery_ms"] = round(recovery_ms, 2)
+    results["replica_warm_start_speedup"] = round(speedup, 2)
+    results["fleet_replicas"] = 2
+    results["fleet_migrated_frames"] = st.migrated_frames
+    results["fleet_refired_frames"] = st.refired_frames
+    results["fleet_uj_per_frame"] = round(st.chip.uj_per_frame, 3)
+    results["warm_cache_dir"] = warm_dir
+    return ok
+
+
 def run(csv: bool = True):
     import platform
     results = {"backend": jax.default_backend(),
@@ -775,8 +850,9 @@ def run(csv: bool = True):
     ok_shared = _bench_shared_serve(results)
     ok_cascade = _bench_cascade(results)
     ok_ctrl = _bench_controller(results)
+    ok_fleet = _bench_fleet(results)
     ok = (ok_mm and ok_pipe and ok_mega and ok_serve and ok_cont
-          and ok_shared and ok_cascade and ok_ctrl)
+          and ok_shared and ok_cascade and ok_ctrl and ok_fleet)
     results["autotune_cache"] = autotune.cache_path()
 
     with open(BENCH_JSON, "w") as f:

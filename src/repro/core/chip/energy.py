@@ -427,3 +427,56 @@ def serve_report(programs: dict, frames: dict, padded: dict | None = None,
         frames_per_s=(served / time_s) if time_s else 0.0,
         power_w=(energy_j / time_s) if time_s else 0.0,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fleet accounting: N chips serving in parallel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FleetReport:
+    """Aggregated bill over a fleet of replicas (N chips in parallel).
+
+    Energy adds across replicas; throughput adds too (the chips serve
+    concurrently, unlike the time-shared single-chip mix where time
+    adds); µJ per served frame is the fleet total energy over the fleet
+    total served.  A dead replica's partial bill stays in — the energy
+    it burned before failing (including abandoned in-flight dispatches)
+    was really spent.
+    """
+    replicas: dict                    # replica name -> ServeReport
+    frames: dict                      # program name -> served, fleet-wide
+    padded: dict                      # program name -> padding, fleet-wide
+    uj_per_frame: float               # fleet energy / fleet served frames
+    frames_per_s: float               # sum of replica throughputs
+    power_w: float                    # sum of replica average powers
+
+    @property
+    def total_frames(self) -> int:
+        return sum(self.frames.values())
+
+
+def fleet_report(reports: dict) -> FleetReport:
+    """Aggregate per-replica :class:`ServeReport`s (``{replica name:
+    ServeReport}``) into the fleet bill.  Per-replica energy is
+    reconstructed from each report's burned slots x per-program µJ —
+    exactly the quantity ``serve_report`` billed, so the fleet total is
+    the sum of what each replica's own ledger already validated."""
+    frames: dict = {}
+    padded: dict = {}
+    energy_j = 0.0
+    fps = 0.0
+    power = 0.0
+    for rep in reports.values():
+        for n in rep.frames:
+            frames[n] = frames.get(n, 0) + rep.frames[n]
+            padded[n] = padded.get(n, 0) + rep.padded.get(n, 0)
+            energy_j += ((rep.frames[n] + rep.padded.get(n, 0))
+                         * rep.reports[n].i2l_energy_per_inference)
+        fps += rep.frames_per_s
+        power += rep.power_w
+    served = sum(frames.values())
+    return FleetReport(
+        replicas=dict(reports), frames=frames, padded=padded,
+        uj_per_frame=(energy_j / served * 1e6) if served else 0.0,
+        frames_per_s=fps, power_w=power)

@@ -18,8 +18,11 @@ Layers of defense (all exercised in tests/test_fault.py):
    restore onto a different mesh just re-shards (checkpoint/ckpt.py); data
    sharding is a pure function of (step, host_id, num_hosts).
 5. **Step retry** — transient collective failures raise; ``retry_step``
-   re-runs the step function up to k times (params are immutable inputs,
-   so a retried step is exact).
+   re-runs the step function up to k times with deterministic
+   exponential backoff between attempts (params are immutable inputs,
+   so a retried step is exact; the injectable sleep keeps tests
+   instant).  The serving fleet reuses exactly this machinery to bring
+   replacement replicas up after a host loss (serving/fleet.py).
 """
 
 from __future__ import annotations
@@ -82,13 +85,46 @@ class StepTimer:
 
 
 def retry_step(fn: Callable, *args, retries: int = 2,
-               exceptions=(RuntimeError,), on_retry: Callable = None):
-    """Re-run a pure step on transient failure (inputs are immutable)."""
+               exceptions=(RuntimeError,), on_retry: Callable = None,
+               backoff_s: float = 0.0, backoff_factor: float = 2.0,
+               max_backoff_s: float = 30.0,
+               sleep: Callable[[float], None] = time.sleep,
+               stats: Optional[dict] = None):
+    """Re-run a pure step on transient failure (inputs are immutable).
+
+    Failed attempt ``k`` (0-based) waits ``backoff_s * backoff_factor**k``
+    seconds (capped at ``max_backoff_s``) before the next try —
+    deterministic exponential backoff, so a retry loop never hammers a
+    still-failing replica during failover.  ``sleep`` is injectable
+    (tests pass a virtual sleep and stay instant).  ``on_retry(attempt,
+    delay_s)`` fires before each backoff; ``stats`` (an optional dict)
+    surfaces the final count to the caller: ``stats["attempts"]`` is the
+    total number of calls made and ``stats["backoff_s"]`` the total
+    backoff requested.  The default ``backoff_s=0.0`` keeps the
+    pre-backoff immediate-retry behaviour.
+    """
+    if backoff_s < 0.0 or backoff_factor < 1.0 or max_backoff_s < 0.0:
+        raise ValueError(
+            f"bad backoff ({backoff_s=}, {backoff_factor=}, "
+            f"{max_backoff_s=})")
+    total_backoff = 0.0
     for attempt in range(retries + 1):
         try:
-            return fn(*args)
+            result = fn(*args)
         except exceptions:
+            if stats is not None:
+                stats["attempts"] = attempt + 1
+                stats["backoff_s"] = total_backoff
             if attempt == retries:
                 raise
+            delay = min(backoff_s * backoff_factor ** attempt, max_backoff_s)
             if on_retry:
-                on_retry(attempt)
+                on_retry(attempt, delay)
+            if delay > 0.0:
+                sleep(delay)
+                total_backoff += delay
+            continue
+        if stats is not None:
+            stats["attempts"] = attempt + 1
+            stats["backoff_s"] = total_backoff
+        return result

@@ -221,6 +221,34 @@ def serve_mesh(devices=None, axis: str = SERVE_AXIS):
     return jax.sharding.Mesh(np.array(devs, dtype=object), (axis,))
 
 
+def partition_serve_meshes(n: int, devices=None, axis: str = SERVE_AXIS):
+    """``n`` serving meshes over disjoint host-major device groups.
+
+    The fleet's replica topology: the flat device list (host-major —
+    ``jax.devices()`` orders by process index, then local id) is split
+    into ``n`` contiguous groups, one sub-mesh per simulated host, so a
+    replica's frames scatter only over its own devices and a host loss
+    takes out exactly one group.  Remainder devices go to the leading
+    groups (sizes differ by at most one).  With fewer devices than
+    replicas the groups wrap round-robin — replicas then *share* devices,
+    which only simulation allows, but keeps single-device CPU tests able
+    to exercise fleet scheduling.
+    """
+    if n < 1:
+        raise ValueError(f"need >= 1 replica, got {n}")
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if len(devs) >= n:
+        base, rem = divmod(len(devs), n)
+        groups, at = [], 0
+        for i in range(n):
+            size = base + (1 if i < rem else 0)
+            groups.append(devs[at:at + size])
+            at += size
+    else:
+        groups = [[devs[i % len(devs)]] for i in range(n)]
+    return [serve_mesh(g, axis=axis) for g in groups]
+
+
 def plan_serve_specs(mesh):
     """(artifact_spec, frames_spec, out_spec) for a sharded InferencePlan.
 

@@ -151,6 +151,20 @@ def main(argv=None):
     ap.add_argument("--no-warm-bn", action="store_true",
                     help="skip the one-batch BN warm (faster, cruder "
                          "thresholds)")
+    ap.add_argument("--fleet", type=int, default=1,
+                    help="serve through N replica hosts (disjoint "
+                         "host-major sub-meshes of the local devices; "
+                         "frames scatter in blocks of --batch)")
+    ap.add_argument("--kill", default=None, metavar="REPLICA",
+                    help="fault-inject: kill this replica (e.g. host0) "
+                         "mid-stream; its frames migrate to survivors "
+                         "(requires --fleet >= 2)")
+    ap.add_argument("--kill-after", type=int, default=8,
+                    help="fire the --kill injection once this many "
+                         "frames have been served fleet-wide")
+    ap.add_argument("--no-replace", action="store_true",
+                    help="do not spawn a warm-started replacement for "
+                         "the killed replica")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -179,6 +193,11 @@ def main(argv=None):
     print(f"folding deployment artifacts for {names} ...")
     artifacts = {n: build_artifact(p, args.seed + i, not args.no_warm_bn)
                  for i, (n, p) in enumerate(programs.items())}
+
+    if args.fleet > 1:
+        return run_fleet(args, names, programs, artifacts, families)
+    if args.kill:
+        ap.error("--kill needs --fleet >= 2 (nowhere to migrate frames)")
 
     if args.autotune:
         from repro.kernels import autotune
@@ -311,6 +330,85 @@ def main(argv=None):
           f"{stats.chip.power_w*1e3:.2f} mW avg "
           f"(paper: up to 1700 f/s, 0.9 mW I2L at S=4)")
     return results, stats
+
+
+def run_fleet(args, names, programs, artifacts, families):
+    """Serve through a :class:`~repro.serving.ServeFleet`: N replica
+    hosts over disjoint sub-meshes, optional mid-stream fault injection
+    (``--kill host0``) with survivor migration and a warm-started
+    replacement host."""
+    from repro.serving import FaultInjector, ServeFleet
+
+    prefetch = (args.prefetch_depth if args.prefetch_depth is not None
+                else int(args.prefetch))
+    injector = (FaultInjector(args.kill, after_served=args.kill_after)
+                if args.kill else None)
+    fleet = ServeFleet(programs, artifacts, replicas=args.fleet,
+                       batch=args.batch, injector=injector,
+                       replace=not args.no_replace,
+                       donate_frames=args.donate,
+                       megakernel=args.megakernel, prefetch=prefetch,
+                       shared=args.shared, policy=args.policy,
+                       families=families or None,
+                       budget_uj_s=args.budget_uj_s, slo_ms=args.slo_ms)
+    ndev = sum(len(d) for d in fleet._devices.values())
+    print(f"serve fleet: {args.fleet} replicas over {ndev} device(s), "
+          f"batch={args.batch}, policy={args.policy}"
+          + (f", kill {args.kill} after {args.kill_after} frames "
+             f"(replace={not args.no_replace})" if args.kill else ""))
+
+    lanes = list(fleet.lanes)
+    fam_map = dict(families or {})
+    geom_prog = {lane: programs[fam_map.get(lane, (lane,))[0]]
+                 for lane in lanes}
+    per = {lane: frame_stream(geom_prog[lane],
+                              -(-args.requests // len(lanes)),
+                              args.seed + 100 + i)
+           for i, lane in enumerate(lanes)}
+    if args.traffic:
+        trace = make_trace(args.traffic, lanes, args.rate, args.requests,
+                           seed=args.seed)
+        print(f"replaying {args.traffic} trace: {len(trace)} frames at "
+              f"{args.rate:,.0f} f/s over {len(lanes)} lane(s)")
+        results = replay(fleet, trace, per)
+    else:
+        idx = {lane: 0 for lane in lanes}
+        for submitted in range(args.requests):
+            lane = lanes[submitted % len(lanes)]
+            fleet.submit(lane, per[lane][idx[lane]])
+            idx[lane] += 1
+            if submitted % args.batch == args.batch - 1:
+                fleet.step()       # interleave serving so a --kill lands
+        results = fleet.drain()    # mid-stream, not after admission
+        results = sorted(results, key=lambda r: r.rid)
+
+    st = fleet.stats()
+    print(f"\nfleet served {st.total_served} frames in {st.dispatches} "
+          f"dispatches across {len(st.replicas)} replica(s)")
+    for name, rs in sorted(st.replicas.items()):
+        mark = " (FAILED)" if name in st.failed_replicas else ""
+        print(f"  {name:>10}{mark}: {sum(rs.served.values()):3d} served, "
+              f"{sum(rs.padded.values())} padded, "
+              f"{rs.dispatches} dispatches")
+    if st.failed_replicas:
+        print(f"failover            : {st.migrated_frames} frames migrated "
+              f"(+{st.refired_frames} refired), recovery "
+              + (f"{st.recovery_ms:.1f} ms" if st.recovery_ms is not None
+                 else "n/a (replacement served no frames)"))
+    print(f"billing             : {st.billed} billed == "
+          f"{st.total_served} served + {sum(st.padded.values())} padded "
+          f"(padding ratio {st.padding_ratio:.3f})")
+    if st.p99_ms > 0.0:
+        print(f"input-to-label      : p50 {st.p50_ms:.2f} / "
+              f"p95 {st.p95_ms:.2f} / p99 {st.p99_ms:.2f} ms (merged)")
+    print(f"host-sim throughput : {st.host_frames_per_s:,.0f} frames/s")
+    print(f"chip-model bill     : {st.chip.uj_per_frame:.2f} uJ/frame, "
+          f"{st.chip.frames_per_s:,.0f} frames/s ({len(st.replicas)} "
+          f"chips in parallel), {st.chip.power_w*1e3:.2f} mW total")
+    ws = st.warm_start
+    print(f"warm-start cache    : {ws['hits']} hits / {ws['misses']} "
+          f"misses, {ws['build_s']*1e3:.0f} ms building")
+    return results, st
 
 
 def run_cascade(args):

@@ -18,6 +18,14 @@ each pull to what ``--slo-ms`` of arrivals should deliver, and
 ``--rate`` paces synthetic admission to make the estimate meaningful
 (unpaced admission measures a near-infinite rate and degrades to the
 full ``--batch``, the old behaviour).
+
+All timing runs through ONE injectable monotonic clock (``clock=``,
+default ``time.perf_counter``): admission pacing, queue timestamps and
+the final throughput figure share a single time domain.  The previous
+mix of ``time.time()`` (non-monotonic wall clock — NTP can step it
+backwards, skewing reported frames/s) and ``time.perf_counter()``
+(monotonic, but a different epoch) is gone; tests inject a virtual
+clock + sleep and never touch wall time.
 """
 
 from __future__ import annotations
@@ -36,7 +44,7 @@ from repro.serving.queue import FrameQueue, FrameRequest
 from repro.train import serve, steps
 
 
-def main(argv=None):
+def main(argv=None, *, clock=time.perf_counter, sleep=time.sleep):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
     ap.add_argument("--scaled", action="store_true")
@@ -73,7 +81,7 @@ def main(argv=None):
     # a long stream never materializes every prompt up front.
     queue = FrameQueue([args.arch])
     next_rid = 0
-    t_start = time.perf_counter()
+    t_start = clock()
 
     def admit():
         nonlocal next_rid
@@ -83,16 +91,15 @@ def main(argv=None):
                 # for it only when the queue is empty (otherwise serve
                 # what's already here and come back)
                 due = t_start + next_rid / args.rate
-                wait = due - time.perf_counter()
+                wait = due - clock()
                 if wait > 0:
                     if queue.pending():
                         return
-                    time.sleep(wait)
+                    sleep(wait)
             prompt = dtok.batch_for_step(cfg, next_rid, global_batch=1,
                                          seq_len=args.prompt_len)["tokens"]
             queue.submit(FrameRequest(rid=next_rid, program=args.arch,
-                                      frame=prompt,
-                                      t_submit=time.perf_counter()))
+                                      frame=prompt, t_submit=clock()))
             next_rid += 1
 
     def pull_size() -> int:
@@ -106,7 +113,7 @@ def main(argv=None):
         return max(1, min(want, args.batch))
 
     served = 0
-    t0 = time.time()
+    t0 = clock()
     key = jax.random.PRNGKey(42)
     while True:
         admit()
@@ -130,9 +137,10 @@ def main(argv=None):
             ids = gen[i].reshape(-1)[: args.gen_len]
             print(f"req {r.rid}: {[int(x) for x in ids][:12]}...")
         served += len(reqs)
-    dt = time.time() - t0
+    dt = clock() - t0
+    tps = served * args.gen_len / dt if dt > 0 else 0.0
     print(f"\n{served} requests, {served * args.gen_len} tokens in {dt:.1f}s "
-          f"({served * args.gen_len / dt:.1f} tok/s host-sim)")
+          f"({tps:.1f} tok/s host-sim)")
 
 
 if __name__ == "__main__":

@@ -7,12 +7,19 @@ Mechanism/policy split (see :mod:`repro.serving.server` for the model and
 * policy   — static, operating-point, or continuous dispatch (:mod:`.policy`)
 * executor — pad/dispatch/finish + prefetch pipeline (:mod:`.executor`)
 * server   — the thin ``ChipServer`` composition (:mod:`.server`)
+* fleet    — N-replica serve fleet with failover migration and
+  warm-started replacement hosts (:mod:`.fleet`)
 * cascade  — detector -> recognizer always-on pipelines (:mod:`.cascade`)
 * traffic  — seeded arrival traces + replay for latency benches
   (:mod:`.traffic`)
 """
 
 from repro.serving.cascade import CascadePipeline, CascadeResult  # noqa: F401
+from repro.serving.fleet import (  # noqa: F401
+    FaultInjector,
+    FleetStats,
+    ServeFleet,
+)
 from repro.serving.policy import (  # noqa: F401
     ContinuousPolicy,
     Dispatch,

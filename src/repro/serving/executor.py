@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core.chip import interpreter, isa
 from repro.distributed import sharding
+from repro.kernels import cache as warmcache
 from repro.serving.policy import Dispatch
 from repro.serving.queue import FrameRequest, FrameResult
 
@@ -60,6 +61,7 @@ class Executor:
                  mesh=None, donate_frames: bool = False,
                  interpret: Optional[bool] = None,
                  megakernel: bool = False, prefetch: int = 0,
+                 warm_start: bool = True,
                  clock: Callable[[], float] = time.perf_counter):
         self.batch = batch
         self.mesh = mesh
@@ -68,6 +70,13 @@ class Executor:
         self._donate = donate_frames
         self._interpret = interpret
         self._megakernel = megakernel
+        # warm_start routes serve-fn builds through the keyed warm-start
+        # cache (kernels/cache.py): a second executor asking for the same
+        # (programs, mesh, options, backend) shares the already-jitted
+        # function — and its compiled shapes — so a replacement fleet
+        # replica skips trace+compile entirely.  Sharing is safe because
+        # serve fns are pure of weights (the artifact is an argument).
+        self._warm_start = warm_start
         self.programs: Dict[str, isa.Program] = dict(programs)
         self._raw_artifacts: Dict[str, Any] = dict(artifacts)
         self.plans: Dict[str, interpreter.InferencePlan] = {}
@@ -87,9 +96,7 @@ class Executor:
             self.plans[name] = plan
             self.artifacts[name] = art
             self._geom[name] = (io.height, io.width, io.in_channels)
-            self._fns[name] = plan.make_serve_fn(
-                mesh=mesh, donate_frames=donate_frames, interpret=interpret,
-                megakernel=megakernel)
+            self._fns[name] = self._serve_fn(plan, (prog,))
         self._composites: Dict[Tuple[str, ...], Dict[str, Any]] = {}
         self._inflight: collections.deque = collections.deque()
         # background fetch only pays off at depth >= 2: with one handle
@@ -99,6 +106,27 @@ class Executor:
             concurrent.futures.ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="serve-fetch")
             if self.prefetch >= 2 else None)
+
+    def _serve_fn(self, plan, progs: Tuple[isa.Program, ...],
+                  kind: str = "serve"):
+        """Build (or warm-start) the jit'd serve fn for ``plan``."""
+        # CompositePlan.make_serve_fn has no megakernel knob (a composite
+        # IS one fused pallas_call already) — only single-program plans
+        # take it.
+        kw: Dict[str, Any] = dict(mesh=self.mesh,
+                                  donate_frames=self._donate,
+                                  interpret=self._interpret)
+        if kind == "serve":
+            kw["megakernel"] = self._megakernel
+        build = lambda: plan.make_serve_fn(**kw)
+        if not self._warm_start:
+            return build()
+        key = warmcache.serve_fn_key(
+            progs, mesh=self.mesh,
+            megakernel=self._megakernel and kind == "serve",
+            donate_frames=self._donate, interpret=self._interpret,
+            kind=kind)
+        return warmcache.get_or_build(key, build)
 
     def geometry(self, variant: str) -> Tuple[int, int, int]:
         return self._geom[variant]
@@ -116,9 +144,9 @@ class Executor:
                 {v: self._raw_artifacts[v] for v in variants})
             if self.mesh is not None:
                 cimage = sharding.replicate_artifact(self.mesh, cimage)
-            cfn = cplan.make_serve_fn(mesh=self.mesh,
-                                      donate_frames=self._donate,
-                                      interpret=self._interpret)
+            cfn = self._serve_fn(
+                cplan, tuple(self.programs[v] for v in variants),
+                kind="composite")
             comp = dict(plan=cplan, image=cimage, fn=cfn)
             self._composites[variants] = comp
         return comp
@@ -250,6 +278,26 @@ class Executor:
         cur = self._inflight.popleft()
         self._fill(launch_fn)                  # stage N+1.. while N runs
         return self.finish(cur)
+
+    def abort(self) -> List[FrameRequest]:
+        """Simulated host loss: drop every in-flight dispatch WITHOUT
+        materializing results and hand back the orphaned requests,
+        oldest dispatch first (the fleet re-enqueues them, in order, at
+        the front of a survivor's lanes).  Device work already launched
+        is abandoned — its energy was billed at launch and is genuinely
+        burned, exactly like a chip losing power mid-frame."""
+        orphans: List[FrameRequest] = []
+        while self._inflight:
+            handle = self._inflight.popleft()
+            fut = handle.get("future")
+            if fut is not None:
+                fut.cancel()
+            for ld in handle["dispatch"].lanes:
+                orphans.extend(ld.requests)
+        if self._fetch_pool is not None:
+            self._fetch_pool.shutdown(wait=False, cancel_futures=True)
+            self._fetch_pool = None
+        return orphans
 
     def close(self) -> None:
         """Release the background fetch thread, syncing (and discarding)

@@ -193,6 +193,23 @@ class FrameQueue:
         """Move the round-robin pointer just past ``lane``."""
         self._rr = (self._order.index(lane) + 1) % len(self._order)
 
+    def requeue_front(self, lane: str, reqs: Iterable[FrameRequest]) -> None:
+        """Push requests back at the *front* of a lane, preserving their
+        relative order (``reqs[0]`` becomes the new head).
+
+        This is the failover-migration primitive: frames orphaned by a
+        dead replica are older than anything a survivor admitted after
+        the failure, so they re-enter at the head of the FIFO and are
+        served first.  The arrival-rate estimator is NOT fed — these are
+        re-arrivals of already-observed admissions, not new traffic."""
+        q = self._lanes[lane]
+        for req in reversed(list(reqs)):
+            if req.program != lane:
+                raise ValueError(
+                    f"request rid={req.rid} belongs to lane "
+                    f"{req.program!r}, not {lane!r}")
+            q.appendleft(req)
+
     # -- canonical compositions --------------------------------------------
 
     def next_batch(self, capacity: int) -> Optional[Tuple[str, List[FrameRequest]]]:

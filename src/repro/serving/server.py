@@ -107,6 +107,7 @@ class ChipServer:
                  budget_uj_s: Optional[float] = None,
                  f_hz: float = energy.F_EMIN,
                  slo_ms: float = 50.0,
+                 warm_start: bool = True,
                  clock=time.perf_counter):
         if set(programs) != set(artifacts):
             raise ValueError(
@@ -164,7 +165,8 @@ class ChipServer:
         self.executor = Executor(self.programs, artifacts, batch=batch,
                                  mesh=mesh, donate_frames=donate_frames,
                                  interpret=interpret, megakernel=megakernel,
-                                 prefetch=self.prefetch, clock=clock)
+                                 prefetch=self.prefetch,
+                                 warm_start=warm_start, clock=clock)
         self.plans = self.executor.plans
         self.artifacts = self.executor.artifacts
         self.queue = FrameQueue(self._lanes)
@@ -193,6 +195,8 @@ class ChipServer:
             groups=groups, quantum=ndev, clock=clock))
 
         # -- accounting -----------------------------------------------------
+        self.failed = False                  # set by fail(); fleet skips us
+        self.aborted_inflight = 0            # in-flight frames fail() dropped
         self._next_rid = 0
         self._dispatches = 0
         self._shared_dispatches = 0
@@ -243,11 +247,14 @@ class ChipServer:
     # -- request side -------------------------------------------------------
 
     def submit(self, program: str, frame,
-               t_submit: Optional[float] = None) -> int:
+               t_submit: Optional[float] = None,
+               rid: Optional[int] = None) -> int:
         """Enqueue one frame on a lane (program or family name); returns
         its request id (arrival order).  ``t_submit`` overrides the
         admission timestamp (trace replay stamps the trace's arrival
-        time); by default the server clock stamps *now*."""
+        time); by default the server clock stamps *now*.  ``rid``
+        overrides the locally-assigned id — a fleet hands out globally
+        unique ids so results from different replicas never collide."""
         if program not in self._geom:
             raise KeyError(
                 f"program {program!r} not resident "
@@ -258,8 +265,11 @@ class ChipServer:
             raise ValueError(
                 f"{program} expects frames of shape {(h, w, c)}, "
                 f"got {frame.shape}")
-        rid = self._next_rid
-        self._next_rid += 1
+        if rid is None:
+            rid = self._next_rid
+            self._next_rid += 1
+        else:
+            self._next_rid = max(self._next_rid, rid + 1)
         if t_submit is None:
             t_submit = self.clock()
         self.queue.submit(FrameRequest(rid=rid, program=program, frame=frame,
@@ -309,12 +319,17 @@ class ChipServer:
         pulled to the host by a background thread; batches still leave
         the queue in exactly the synchronous order, so fairness is
         untouched.
+
+        All timing goes through ``self.clock`` — the injected clock is
+        the server's single time domain (``_host_wall_s``, ``t_submit``,
+        ``t_done`` and the latency trace all share it), so a
+        ``VirtualClock`` replay never silently mixes in wall time.
         """
-        t0 = time.perf_counter()
+        t0 = self.clock()
         try:
             results = self.executor.step(self._launch)
         finally:
-            self._host_wall_s += time.perf_counter() - t0
+            self._host_wall_s += self.clock() - t0
         for r in results:
             if r.t_submit <= 0.0 or r.t_done <= 0.0:
                 continue                     # unstamped: no latency account
@@ -347,6 +362,30 @@ class ChipServer:
         server keeps working afterwards with prefetch degraded to
         synchronous fetch; safe to call more than once."""
         self.executor.close()
+
+    def fail(self) -> Dict[str, List[FrameRequest]]:
+        """Simulated host loss: kill this replica and hand back every
+        frame it had not finished serving, grouped by lane with order
+        preserved (in-flight dispatches oldest-first, then the queued
+        FIFO).  The energy already billed for abandoned in-flight
+        dispatches stays billed — it was burned the moment the batch hit
+        the array — so this replica's ``billed == served + padded``
+        ledger stays consistent; the migrated frames are re-billed by
+        whoever serves them.  The server is unusable afterwards."""
+        orphans: Dict[str, List[FrameRequest]] = {
+            lane: [] for lane in self._lanes}
+        inflight = self.executor.abort()        # in-flight, oldest first
+        self.aborted_inflight = len(inflight)   # fleet's refired count
+        for req in inflight:
+            orphans[req.program].append(req)
+        for lane in self._lanes:                # then the queued backlog
+            while True:
+                got = self.queue.take(lane, self.batch)
+                if not got:
+                    break
+                orphans[lane].extend(got)
+        self.failed = True
+        return {lane: reqs for lane, reqs in orphans.items() if reqs}
 
     # -- accounting ---------------------------------------------------------
 

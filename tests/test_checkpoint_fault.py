@@ -178,6 +178,52 @@ def test_retry_step_gives_up():
         fault.retry_step(always, 0, retries=2)
 
 
+def test_retry_step_exponential_backoff():
+    """Regression pin for the no-backoff bug: failed attempt k waits
+    backoff_s * factor**k (capped), through the injected sleep, and the
+    attempt count surfaces via the stats out-dict."""
+    slept, calls, stats = [], {"n": 0}, {}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise RuntimeError("transient")
+        return x
+
+    retried = []
+    out = fault.retry_step(flaky, 7, retries=5, backoff_s=0.1,
+                           backoff_factor=2.0, max_backoff_s=0.25,
+                           sleep=slept.append, stats=stats,
+                           on_retry=lambda a, d: retried.append((a, d)))
+    assert out == 7
+    assert slept == pytest.approx([0.1, 0.2, 0.25])   # capped at max
+    assert retried == [(0, 0.1), (1, pytest.approx(0.2)), (2, 0.25)]
+    assert stats["attempts"] == 4
+    assert stats["backoff_s"] == pytest.approx(0.55)
+
+
+def test_retry_step_default_is_immediate():
+    """backoff_s=0.0 (the default) keeps the old immediate-retry path:
+    the injected sleep is never called."""
+    slept, calls = [], {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] < 2:
+            raise RuntimeError("transient")
+        return x
+
+    assert fault.retry_step(flaky, 1, retries=2, sleep=slept.append) == 1
+    assert slept == []
+
+
+def test_retry_step_rejects_bad_backoff():
+    with pytest.raises(ValueError):
+        fault.retry_step(lambda: 0, backoff_s=-1.0)
+    with pytest.raises(ValueError):
+        fault.retry_step(lambda: 0, backoff_factor=0.5)
+
+
 def test_preemption_guard_flag():
     g = fault.PreemptionGuard(install=False)
     assert not g.requested
