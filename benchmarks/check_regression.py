@@ -58,6 +58,7 @@ import sys
 THROUGHPUT_KEYS = ("pipeline_frames_per_s", "serve_frames_per_s",
                    "serve_frames_per_s_multi", "serve_frames_per_s_shared",
                    "serve_frames_per_s_cascade",
+                   "serve_frames_per_s_cascade_fused",
                    "serve_frames_per_s_continuous")
 # latency keys: LOWER is better — fail when the fresh run is more than
 # the tolerance ABOVE the committed baseline (host-gated like the
@@ -82,6 +83,11 @@ INVARIANT_FLOORS = {
     # up no slower than the cold build it replaces — a same-run paired
     # ratio, so it holds on any host
     "replica_warm_start_speedup": 1.0,
+    # the fused in-kernel cascade (one composite dispatch per detector
+    # batch, escalation mask + recognizer drain inside the kernel) must
+    # serve the same stream no slower than the host-side cascade — a
+    # same-run paired ratio, so it holds on any host
+    "cascade_fused_speedup_vs_host": 1.0,
 }
 # cross-key invariants: (lhs, rhs) pairs where fresh[lhs] must stay
 # strictly below fresh[rhs] — the continuous admission window must burn

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Dict, Mapping, Optional, Tuple
 
 import jax
@@ -560,13 +561,19 @@ class CompositePlan:
 
 
 def pack_programs(programs: Mapping[str, isa.Program],
-                  artifacts: Mapping[str, Any]):
+                  artifacts: Mapping[str, Any], *,
+                  exact_tiling: bool = True):
     """Compile a shared-array composite: (CompositePlan, composite image).
 
     ``programs`` maps member names to validated ISA programs whose
     S-modes must tile the 256-channel array exactly (sum of 256/S == 256
     — 4xS4, 2xS2, 2xS4+1xS2, ...); ``artifacts`` maps the same names to
     any admissible artifact form (float-folded / packed / weight image).
+    ``exact_tiling=False`` lifts the tiling constraint — the image
+    layout generalizes to any total F — for packs whose members execute
+    *sequentially* within one dispatch (the fused cascade: detector then
+    recognizer, never both at once) rather than concurrently; concurrent
+    composites keep the exact-tiling contract.
 
     The composite weight image packs the members side-by-side on the F
     axis — the TPU analogue of loading several programs into disjoint
@@ -587,7 +594,7 @@ def pack_programs(programs: Mapping[str, isa.Program],
     for p in progs:
         isa.validate(p)
     widths = [isa.ARRAY_CHANNELS // p.s for p in progs]
-    if len(progs) > 1 and sum(widths) != isa.ARRAY_CHANNELS:
+    if exact_tiling and len(progs) > 1 and sum(widths) != isa.ARRAY_CHANNELS:
         raise isa.ProgramError(
             f"S-modes {[p.s for p in progs]} do not tile the array "
             f"exactly: sum(256/S) = {sum(widths)} != {isa.ARRAY_CHANNELS}")
@@ -645,6 +652,174 @@ def pack_programs(programs: Mapping[str, isa.Program],
     cplan = CompositePlan(names=names, programs=progs, plans=plans,
                           spec=tuple(mspecs))
     return cplan, {"cw": cw, "ct": ct, "cf": cf, "fw": fw}
+
+
+# ---------------------------------------------------------------------------
+# Cascade plans: in-kernel detector -> recognizer escalation
+# ---------------------------------------------------------------------------
+
+_INT32_MIN = -(2 ** 31)
+_INT32_MAX = 2 ** 31 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadePlan:
+    """A detector + recognizer pair compiled as ONE fused dispatch unit.
+
+    The paper's always-on hierarchy with the control flow *inside* the
+    kernel: both stages' weight images share one composite SRAM image
+    (:func:`pack_cascade`), the detector runs over every frame tile, the
+    escalation decision (positive-class logit margin >= threshold) is
+    made in-kernel, and the recognizer drains only the escalated lanes
+    through bounded-iteration control flow
+    (``kernels.megakernel.cascade_forward``) — one dispatch, no host
+    round-trip between the stages.  Unlike a :class:`CompositePlan` the
+    two members run *sequentially* on the array (detector phase, then
+    recognizer phase), so their S-modes need not tile the 256 channels.
+
+    The escalation rule is bit-exact vs the host cascade's float rule:
+    integer logits satisfy ``m >= margin  <=>  m >= ceil(margin)``, and
+    :meth:`margin_ctrl` folds the host float margin into the int32
+    threshold the kernel compares against (``+/-inf`` map to sentinels
+    beyond any reachable margin — FC logit magnitudes are bounded by the
+    fan-in, orders below 2^31).
+    """
+    detector: str
+    recognizer: str
+    programs: Tuple[isa.Program, ...]          # (det, rec)
+    plans: Tuple[InferencePlan, ...]
+    spec: Tuple[Any, ...]                      # 2-member composite spec
+    positive_class: int = 1
+
+    @property
+    def classes(self) -> Tuple[int, int]:
+        return tuple(sp[-1][2] for sp in self.spec)
+
+    @property
+    def n_groups(self) -> int:
+        return len(kops.member_groups(self.spec))
+
+    @staticmethod
+    def margin_ctrl(margin: float, n_real: int):
+        """Fold a host-side float escalation margin into the kernel's
+        dynamic ``(1, 2)`` int32 control word ``[threshold, n_real]``.
+
+        For integer margins m, ``m >= margin`` (the host rule, float)
+        holds iff ``m >= ceil(margin)`` — so the ceil makes the integer
+        compare bit-exact for *every* float margin.  ``-inf`` (escalate
+        all) and ``+inf`` (escalate none) clamp to the int32 extremes,
+        both unreachable by real margins.  ``n_real`` masks padding
+        lanes out of escalation.
+        """
+        if math.isnan(margin):
+            raise ValueError("escalation margin must not be NaN")
+        thr = (_INT32_MIN if margin == float("-inf") else
+               _INT32_MAX if margin == float("inf") else
+               int(min(max(math.ceil(margin), _INT32_MIN), _INT32_MAX)))
+        return jnp.array([[thr, int(n_real)]], jnp.int32)
+
+    def forward_fused(self, image, frames: jax.Array, ctrl,
+                      interpret: bool | None = None,
+                      bb: Optional[int] = None, ft=None,
+                      rb: Optional[int] = None, check_every: int = 1):
+        """One fused dispatch: frames -> both stages' answers.
+
+        ``ctrl`` is the dynamic control word from :meth:`margin_ctrl`
+        (dynamic so margin sweeps and ragged batches never retrace).
+        Returns ``(det_logits, det_labels, rec_logits, rec_labels,
+        queue, counts)`` — logits float32, labels int; ``counts[0] = E``
+        escalated frames, ``queue[:E]`` their ascending frame indices,
+        ``rec_*[k]`` answering frame ``queue[k]`` (compacted);
+        ``counts[1]`` the recognizer frame slots computed (>= E — the
+        drain chunks' padding, billed by the serving layer).  ``bb``/
+        ``ft`` resolve through the autotune cache under the pair's
+        composite fingerprint; tile sizes and ``rb``/``check_every``
+        are pure schedule choices — bit-exact for every setting.
+        """
+        batch = frames.shape[0]
+        bb, ft = autotune.composite_tiles(self.programs, batch, bb=bb, ft=ft,
+                                          per_group=True,
+                                          n_groups=self.n_groups)
+        det, rec, queue, counts = kops.cascade_forward(
+            image, frames, ctrl, spec=self.spec, bb=bb,
+            rb=0 if rb is None else rb, ft=ft, check_every=check_every,
+            positive_class=self.positive_class, interpret=interpret)
+        det_l = det.astype(jnp.float32)
+        rec_l = rec.astype(jnp.float32)
+        return (det_l, jnp.argmax(det_l, axis=-1),
+                rec_l, jnp.argmax(rec_l, axis=-1), queue, counts)
+
+    def make_serve_fn(self, mesh=None, donate_frames: bool = False,
+                      interpret: bool | None = None,
+                      bb: Optional[int] = None, ft: Optional[int] = None):
+        """jit: (image, frames, ctrl) -> fused cascade outputs.
+
+        The fused cascade does not shard: the in-kernel escalation queue
+        compacts across the whole batch, so scattering frames over a
+        mesh would split the queue mid-dispatch.  A 1-device mesh (or
+        ``None``) serves on the default device; multi-device meshes are
+        rejected — serve the cascade host-side (``CascadePipeline``
+        without ``fused``) to shard the stages independently.
+        """
+        if mesh is not None and mesh.devices.size > 1:
+            raise ValueError(
+                "fused cascade dispatch does not shard over a multi-device "
+                "mesh (the escalation queue is batch-global); use the "
+                "host-side cascade for sharded stages")
+        fwd = lambda image, frames, ctrl: self.forward_fused(
+            image, frames, ctrl, interpret=interpret, bb=bb, ft=ft)
+        donate = (1,) if donate_frames else ()
+        return jax.jit(fwd, donate_argnums=donate)
+
+
+def pack_cascade(programs: Mapping[str, isa.Program],
+                 artifacts: Mapping[str, Any], *,
+                 detector: str, recognizer: str,
+                 positive_class: int = 1):
+    """Compile a fused cascade pair: (CascadePlan, composite image).
+
+    ``programs``/``artifacts`` are keyed like :func:`pack_programs`;
+    ``detector``/``recognizer`` name the two members.  The stages must
+    agree on frame geometry (one stream feeds both) and the detector
+    must have >= 2 classes with ``positive_class`` among them.  The
+    composite image is the ordinary side-by-side F-axis pack with the
+    detector at offset 0 — built with ``exact_tiling=False`` because the
+    stages run sequentially within the dispatch (see
+    :func:`pack_programs`).
+    """
+    if detector == recognizer:
+        raise isa.ProgramError(
+            "cascade stages must be distinct programs, got "
+            f"{detector!r} twice")
+    for name in (detector, recognizer):
+        if name not in programs:
+            raise KeyError(f"cascade stage {name!r} missing from programs "
+                           f"(have {sorted(programs)})")
+    det_prog, rec_prog = programs[detector], programs[recognizer]
+    iod, ior = det_prog.instrs[0], rec_prog.instrs[0]
+    gd = (iod.height, iod.width, iod.in_channels, iod.bits)
+    gr = (ior.height, ior.width, ior.in_channels, ior.bits)
+    if gd != gr:
+        raise isa.ProgramError(
+            f"cascade stages disagree on frame geometry: detector takes "
+            f"(h, w, c, bits) = {gd}, recognizer takes {gr} — one frame "
+            "stream must feed both stages")
+    ncd = det_prog.instrs[-1].out_features
+    if ncd < 2:
+        raise isa.ProgramError(
+            f"detector needs >= 2 classes for a logit margin, got {ncd}")
+    if not 0 <= positive_class < ncd:
+        raise isa.ProgramError(
+            f"positive_class {positive_class} out of range for the "
+            f"detector's {ncd} classes")
+    cplan, image = pack_programs(
+        {detector: det_prog, recognizer: rec_prog},
+        {detector: artifacts[detector], recognizer: artifacts[recognizer]},
+        exact_tiling=False)
+    plan = CascadePlan(detector=detector, recognizer=recognizer,
+                       programs=cplan.programs, plans=cplan.plans,
+                       spec=cplan.spec, positive_class=positive_class)
+    return plan, image
 
 
 def forward_infer(folded, program: isa.Program, images: jax.Array,

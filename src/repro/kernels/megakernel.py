@@ -383,6 +383,237 @@ def composite_forward(image, frames, *, spec, bb: int = 8, ft=0,
     return tuple(o[:b] for o, b in zip(outs, bs))
 
 
+# ---------------------------------------------------------------------------
+# In-kernel conditional cascade: detector -> escalation queue -> recognizer
+# ---------------------------------------------------------------------------
+
+def _member_ft(ft, spec, m: int):
+    """Member ``m``'s conv f-tile: a plain int applies everywhere, a
+    tuple carries one entry per member *group* (``member_groups`` order)."""
+    if not isinstance(ft, tuple):
+        return ft
+    for gi, group in enumerate(_member_groups(spec)):
+        if m in group:
+            return ft[gi]
+    raise AssertionError(f"member {m} not in any group of {spec}")
+
+
+def bounded_drain_loop(cond_fun, chunk_fun, n_chunks: int,
+                       check_every: int = 1) -> None:
+    """Drain up to ``n_chunks`` work chunks, re-checking the live
+    condition every ``check_every`` chunks — the while_loop-with-a-
+    limited-cond idiom made jittable: the trip count is static
+    (``n_chunks`` bounds the queue), early exit is a *predicated skip*
+    rather than a data-dependent trip count, and the condition is
+    evaluated once per chunk group instead of once per chunk (the
+    ``k``-step re-check that amortizes the cond when chunks are cheap).
+
+    ``cond_fun(g0)`` must return a scalar bool — "is there still work at
+    or beyond chunk ``g0``" — and ``chunk_fun(c)`` performs chunk ``c``'s
+    effects (ref stores, DMA); both run *inside* a Pallas kernel: the
+    group skip lowers to ``pl.when`` and the intra-group sweep to a
+    ``lax.fori_loop``, so a drained queue skips whole groups of
+    recognizer work at trace-free runtime cost.
+    """
+    if check_every < 1:
+        raise ValueError(f"check_every must be >= 1, got {check_every}")
+    for g0 in range(0, n_chunks, check_every):
+        n = min(check_every, n_chunks - g0)
+
+        @pl.when(cond_fun(g0))
+        def _(g0=g0, n=n):
+            jax.lax.fori_loop(0, n,
+                              lambda k, c: (chunk_fun(g0 + k), c)[1], 0)
+
+
+def _cascade_kernel(frames_hbm, ctrl_ref, cw_ref, ct_ref, cf_ref, fw_ref,
+                    det_out, rec_out, queue, count,
+                    fbuf, gbuf, in_sem, g_sem,
+                    *, spec, bb: int, rb: int, bpad: int,
+                    check_every: int, positive_class: int, ft):
+    """One grid step of the fused detector->recognizer cascade.
+
+    Grid = (n_det_tiles + 1,): every step but the last streams one
+    detector frame tile (2-slot double-buffered DMA, exactly the
+    composite kernel's pipeline), runs the detector member, writes its
+    logits, and *escalates in-kernel* — the integer logit margin
+    (positive-class logit minus the best competitor) is compared against
+    the ``ctrl`` threshold and winning frame indices are compacted into
+    the VMEM escalation ``queue`` (count[0, 0] = queue depth).  The
+    final step drains the queue through the recognizer member in chunks
+    of ``rb`` via :func:`bounded_drain_loop`: each live chunk gathers
+    its frames from HBM by queue index (per-lane dynamic-slice DMA),
+    runs the recognizer, and stores logits at the chunk's queue rows
+    (compacted layout: recognizer row k answers queue entry k).
+    count[0, 1] counts recognizer frame slots actually computed — the
+    energy bill's escalated + chunk-padding figure, reported back to the
+    host as a scalar output.
+    """
+    n_det = bpad // bb
+    n_chunks = -(-bpad // rb)
+    det_spec, rec_spec = spec
+    i = pl.program_id(0)
+    slot = jax.lax.rem(i, 2)
+    nxt = jax.lax.rem(i + 1, 2)
+
+    def in_copy(s, t):
+        return pltpu.make_async_copy(frames_hbm.at[pl.ds(t * bb, bb)],
+                                     fbuf.at[s], in_sem.at[s])
+
+    @pl.when(i == 0)                     # init + warm-up DMA for tile 0
+    def _():
+        count[...] = jnp.zeros_like(count)
+        queue[...] = jnp.zeros_like(queue)
+        rec_out[...] = jnp.zeros_like(rec_out)
+        in_copy(0, 0).start()
+
+    @pl.when(i + 1 < n_det)              # tile N+1 streams while N computes
+    def _():
+        in_copy(nxt, i + 1).start()
+
+    thr = ctrl_ref[0, 0]
+    n_real = ctrl_ref[0, 1]
+
+    @pl.when(i < n_det)                  # detector phase: one frame tile
+    def _():
+        in_copy(slot, i).wait()
+        logits = _run_member(fbuf[slot], cw_ref[...], ct_ref[...],
+                             cf_ref[...], fw_ref[...], det_spec,
+                             _member_ft(ft, spec, 0))
+        det_out[pl.ds(i * bb, bb)] = logits
+        # escalation mask: integer margin vs the pre-ceiled threshold
+        # (m >= ceil(margin) <=> m >= margin for integer m), padding
+        # lanes (global index >= n_real) never escalate
+        pos = logits[:, positive_class]
+        rest = jnp.max(jnp.where(
+            jnp.arange(logits.shape[1])[None, :] == positive_class,
+            jnp.iinfo(jnp.int32).min, logits), axis=1)
+        m = pos - rest
+        gidx = i * bb + jnp.arange(bb, dtype=jnp.int32)
+        mask = (m >= thr) & (gidx < n_real)
+        # order-preserving compaction into the escalation queue: frame
+        # p lands at queue row cnt + (# escalated before p in this tile)
+        cnt = count[0, 0]
+        tgt = jnp.where(mask, cnt + jnp.cumsum(mask) - 1, bpad)
+        queue[...] = queue[...].at[tgt, 0].set(gidx, mode="drop")
+        count[0, 0] = cnt + jnp.sum(mask)
+
+    @pl.when(i == n_det)                 # recognizer phase: drain the queue
+    def _():
+        total = count[0, 0]
+
+        def chunk(c):
+            # ragged tail clamps into range; the overlapped rows are
+            # recomputed idempotently (same queue entries, same logits)
+            base = jnp.minimum(c * rb, bpad - rb)
+            idxs = queue[pl.ds(base, rb)][:, 0]
+            copies = [pltpu.make_async_copy(
+                frames_hbm.at[pl.ds(idxs[j], 1)],
+                gbuf.at[pl.ds(j, 1)], g_sem.at[j]) for j in range(rb)]
+            for cp in copies:            # gather rb frames by queue index
+                cp.start()
+            for cp in copies:
+                cp.wait()
+            logits = _run_member(gbuf[...], cw_ref[...], ct_ref[...],
+                                 cf_ref[...], fw_ref[...], rec_spec,
+                                 _member_ft(ft, spec, 1))
+            rec_out[pl.ds(base, rb)] = logits
+            count[0, 1] = count[0, 1] + rb   # slots computed = the bill
+
+        bounded_drain_loop(lambda g0: g0 * rb < total, chunk,
+                           n_chunks, check_every)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spec", "bb", "rb", "ft", "check_every", "positive_class", "interpret"))
+def cascade_forward(image, frames: jax.Array, ctrl, *, spec,
+                    bb: int = 8, rb: int = 0, ft=0, check_every: int = 1,
+                    positive_class: int = 1, interpret: bool = False):
+    """Fused two-stage cascade in ONE resident ``pallas_call``.
+
+    image:  the det+rec composite weight image
+            (``interpreter.pack_cascade``) — both stages' SRAM contents
+            VMEM-resident for the whole dispatch.
+    frames: (B, H, W, Cin) integer images — ONE stream; the detector
+            sees every frame, the recognizer only the frames the kernel
+            itself escalates.
+    ctrl:   (1, 2) int32 ``[threshold, n_real]`` — the escalation
+            threshold on the integer logit margin (host float margins
+            pre-ceiled by ``CascadePlan.margin_ctrl``; dynamic, so
+            margin sweeps and ragged batches never retrace) and the
+            count of real (non-padding) frames.
+    spec:   static 2-member composite spec, detector first.
+    bb/ft:  detector frame-tile / conv f-tile sizes (``ft`` may be a
+            per-group tuple, ``member_groups`` order).
+    rb:     recognizer chunk size (0 = ``bb``): escalated frames drain
+            through the recognizer ``rb`` at a time.
+    check_every: drain-loop condition re-check period, in chunks
+            (:func:`bounded_drain_loop`).
+
+    Returns ``(det_logits (B, Cd), rec_logits (B, Cr), queue (B,),
+    counts (2,))`` — all int32.  ``counts[0]`` is the escalated count E;
+    ``queue[:E]`` holds the escalated frame indices in ascending order
+    and ``rec_logits[k]`` answers frame ``queue[k]`` (compacted layout;
+    rows >= E are zeros/garbage).  ``counts[1]`` is the number of
+    recognizer frame slots computed (>= E: chunk padding) — the
+    recognizer-stage energy bill.
+    """
+    if len(spec) != 2:
+        raise ValueError(f"cascade spec needs exactly 2 members (detector, "
+                         f"recognizer), got {len(spec)}")
+    det_spec, rec_spec = spec
+    io = det_spec[0]
+    assert io[0] == "io", det_spec
+    h, w, cin = io[1], io[2], io[3]
+    ncd, ncr = det_spec[-1][2], rec_spec[-1][2]
+    if ncd < 2:
+        raise ValueError(f"detector needs >= 2 classes, got {ncd}")
+    if not 0 <= positive_class < ncd:
+        raise ValueError(f"positive_class {positive_class} out of range for "
+                         f"{ncd} detector classes")
+    b = frames.shape[0]
+    bb = max(1, min(bb, b))
+    bpad = -(-b // bb) * bb
+    n_det = bpad // bb
+    rb = max(1, min(rb if rb else bb, bpad))
+
+    frames = frames.astype(jnp.int32)
+    if frames.shape[0] != bpad:
+        frames = jnp.pad(frames, ((0, bpad - b),) + ((0, 0),) * 3)
+    ctrl = jnp.asarray(ctrl, jnp.int32).reshape(1, 2)
+
+    def resident(arr):                   # whole array, fetched once
+        nd = arr.ndim
+        return pl.BlockSpec(arr.shape, lambda i, _n=nd: (0,) * _n)
+
+    def vmem_out(shape):                 # VMEM-resident across the grid
+        nd = len(shape)
+        return pl.BlockSpec(shape, lambda i, _n=nd: (0,) * _n)
+
+    det, rec, qout, cnt = pl.pallas_call(
+        functools.partial(_cascade_kernel, spec=spec, bb=bb, rb=rb,
+                          bpad=bpad, check_every=check_every,
+                          positive_class=positive_class, ft=ft),
+        grid=(n_det + 1,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),   # frames: HBM
+                  resident(ctrl),
+                  resident(image["cw"]), resident(image["ct"]),
+                  resident(image["cf"]), resident(image["fw"])],
+        out_specs=[vmem_out((bpad, ncd)), vmem_out((bpad, ncr)),
+                   vmem_out((bpad, 1)), vmem_out((1, 2))],
+        out_shape=[jax.ShapeDtypeStruct((bpad, ncd), jnp.int32),
+                   jax.ShapeDtypeStruct((bpad, ncr), jnp.int32),
+                   jax.ShapeDtypeStruct((bpad, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 2), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((2, bb, h, w, cin), jnp.int32),
+                        pltpu.VMEM((rb, h, w, cin), jnp.int32),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((rb,))],
+        interpret=interpret,
+    )(frames, ctrl, image["cw"], image["ct"], image["cf"], image["fw"])
+    return det[:b], rec[:b], qout[:b, 0], cnt[0]
+
+
 def megakernel_forward(image, frames: jax.Array, *, spec,
                        bb: int = 8, ft: int = 0,
                        interpret: bool = False) -> jax.Array:

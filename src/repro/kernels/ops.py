@@ -95,6 +95,25 @@ def composite_forward(image, frames, *, spec, bb: int = 8, ft=0,
                                  ft=ft, interpret=interpret)
 
 
+def cascade_forward(image, frames, ctrl, *, spec, bb: int = 8, rb: int = 0,
+                    ft=0, check_every: int = 1, positive_class: int = 1,
+                    interpret: bool | None = None):
+    """Fused detector->recognizer cascade in one resident ``pallas_call``:
+    the detector screens every frame tile, the escalation mask (integer
+    logit margin vs the ``ctrl`` threshold) is computed in-kernel, and
+    the recognizer drains only the escalated lanes through the bounded
+    drain loop.  Returns (det_logits, rec_logits, queue, counts) — see
+    ``megakernel.cascade_forward`` for the compacted layout and
+    ``interpreter.pack_cascade`` for building ``image``/``spec``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _mk.cascade_forward(image, frames, ctrl, spec=spec, bb=bb, rb=rb,
+                               ft=ft, check_every=check_every,
+                               positive_class=positive_class,
+                               interpret=interpret)
+
+
 def member_groups(spec):
     """A composite spec's sub-array groups (members with shape-identical
     IO+conv chains stack into one fused conv); per-group ``ft`` tuples

@@ -14,7 +14,9 @@ Mechanism/policy split (see :mod:`repro.serving.server` for the model and
   (:mod:`.traffic`)
 """
 
-from repro.serving.cascade import CascadePipeline, CascadeResult  # noqa: F401
+from repro.serving.cascade import (CascadePipeline,  # noqa: F401
+                                   CascadeResult, calibrate_margin,
+                                   margin_for_recall, margins_of)
 from repro.serving.fleet import (  # noqa: F401
     FaultInjector,
     FleetStats,

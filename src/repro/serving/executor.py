@@ -98,6 +98,7 @@ class Executor:
             self._geom[name] = (io.height, io.width, io.in_channels)
             self._fns[name] = self._serve_fn(plan, (prog,))
         self._composites: Dict[Tuple[str, ...], Dict[str, Any]] = {}
+        self._cascades: Dict[Tuple[str, str, int], Dict[str, Any]] = {}
         self._inflight: collections.deque = collections.deque()
         # background fetch only pays off at depth >= 2: with one handle
         # in flight the consumer blocks on it immediately, so a thread
@@ -150,6 +151,30 @@ class Executor:
             comp = dict(plan=cplan, image=cimage, fn=cfn)
             self._composites[variants] = comp
         return comp
+
+    def cascade_for(self, detector: str, recognizer: str, *,
+                    positive_class: int = 1) -> Dict[str, Any]:
+        """The compiled fused detector->recognizer cascade for a variant
+        pair (lazy; cached like :meth:`composite_for`).  The serve fn
+        routes through the warm-start cache with the positive class in
+        the key — cascades of the same pair at different positive
+        classes trace different escalation masks."""
+        key = (detector, recognizer, positive_class)
+        casc = self._cascades.get(key)
+        if casc is None:
+            cplan, cimage = interpreter.pack_cascade(
+                {v: self.programs[v] for v in (detector, recognizer)},
+                {v: self._raw_artifacts[v] for v in (detector, recognizer)},
+                detector=detector, recognizer=recognizer,
+                positive_class=positive_class)
+            if self.mesh is not None:
+                cimage = sharding.replicate_artifact(self.mesh, cimage)
+            cfn = self._serve_fn(
+                cplan, (self.programs[detector], self.programs[recognizer]),
+                kind=f"cascade.p{positive_class}")
+            casc = dict(plan=cplan, image=cimage, fn=cfn)
+            self._cascades[key] = casc
+        return casc
 
     def warm_composites(self, groups) -> None:
         """Precompile composites for admission-time groups (static

@@ -143,6 +143,52 @@ def test_cascade_report_math(cascade_setup):
     assert rep_np.uj_per_frame == pytest.approx(det_uj + rec_uj)
 
 
+def test_cascade_billing_ragged_drain(cascade_setup):
+    """Launch-ledger billing across a ragged drain: the trailing partial
+    recognizer batch's padding is billed exactly once, the server-wide
+    invariant ``billed == served + padded`` holds, and the escalation
+    rate's denominator is the frames served (not the padded slots)."""
+    det, rec, arts, frames, (dl, _), _ = cascade_setup
+    margins = dl[:, 1] - dl[:, 0]
+    # a margin escalating an ODD count (batch=2 -> ragged remainder)
+    margin = float(np.sort(margins)[-3])       # top-3 escalate, 3 = 2 + 1
+    server = _server(det, rec, arts)
+    casc = CascadePipeline(server, "det", "rec", margin=margin)
+    casc.submit_many(frames)
+    casc.drain()
+    stats = server.stats()
+    assert server._billed == (sum(stats.served.values())
+                              + sum(stats.padded.values()))
+    assert stats.served["det"] == 7 and stats.padded["det"] == 1
+    assert stats.served["rec"] == 3 and stats.padded["rec"] == 1
+    rep = casc.report()
+    det_uj = energy.analyze_net(det).i2l_energy_per_inference * 1e6
+    rec_uj = energy.analyze_net(rec).i2l_energy_per_inference * 1e6
+    assert rep.frames == 7 and rep.escalated == 3
+    assert rep.escalation_rate == pytest.approx(3 / 7)
+    assert rep.uj_per_frame == pytest.approx(
+        (8 * det_uj + 4 * rec_uj) / 7)
+
+
+def test_cascade_report_midstream_never_bills_queued(cascade_setup):
+    """A mid-stream report bills only what hit the array: frames still
+    queued on the detector — or escalations deferred awaiting a full
+    recognizer batch — are absent from the bill until dispatched."""
+    det, rec, arts, frames, _, _ = cascade_setup
+    server = _server(det, rec, arts)
+    casc = CascadePipeline(server, "det", "rec", margin=float("-inf"))
+    casc.submit_many(frames[:5])
+    casc.step()                               # one det dispatch of 2
+    rep = casc.report()
+    assert rep.frames == 2                    # 3 still queued
+    # both frames escalated but the recognizer batch is still deferred
+    assert casc.escalated == 2 and rep.escalated == 0
+    casc.drain()
+    assert casc.report().frames == 5
+    assert casc.report().escalated == 5
+    server.close()
+
+
 def test_cascade_report_paper_pair_beats_recognizer_only():
     """The paper's pair (0.92 uJ/f S=4 detector -> 14.4 uJ/f S=1
     recognizer): at any escalation rate below 1 - det/rec the cascade
