@@ -2,10 +2,10 @@
 
 Usage (CI runs exactly this, see .github/workflows/ci.yml)::
 
-    BENCH_KERNELS_JSON=BENCH_fresh.json \
-        PYTHONPATH=src python benchmarks/kernel_microbench.py
+    PYTHONPATH=src python benchmarks/kernel_microbench.py
     PYTHONPATH=src python benchmarks/check_regression.py \
-        --baseline BENCH_kernels.json --fresh BENCH_fresh.json
+        --baseline BENCH_kernels.json \
+        --fresh benchmarks/out/BENCH_fresh.json
 
 Two kinds of checks:
 
@@ -31,10 +31,14 @@ Two kinds of checks:
   continuous batching must beat static dispatch on the committed
   Poisson trace in both p99 latency
   (``serve_p99_speedup_vs_static``) and uJ/frame
-  (``serve_energy_ratio_vs_static``).  These hold on any host, so they
-  are hard floors rather than tolerance bands.  One cross-key check
-  rides along: ``serve_padding_ratio_continuous`` must stay strictly
-  below ``serve_padding_ratio_static`` within the fresh run.
+  (``serve_energy_ratio_vs_static``), and the delta-gated video path
+  must serve the committed scene no slower than full recompute
+  (``temporal_speedup_vs_full``).  These hold on any host, so they
+  are hard floors rather than tolerance bands.  Cross-key checks ride
+  along: ``serve_padding_ratio_continuous`` must stay strictly below
+  ``serve_padding_ratio_static``, and the gated
+  ``temporal_uj_per_frame`` strictly below
+  ``temporal_uj_per_frame_ungated``, within the fresh run.
 
 Keys present on only ONE side (a metric newly added by this PR, or one
 the baseline carries but the fresh run no longer emits) are reported as
@@ -59,7 +63,8 @@ THROUGHPUT_KEYS = ("pipeline_frames_per_s", "serve_frames_per_s",
                    "serve_frames_per_s_multi", "serve_frames_per_s_shared",
                    "serve_frames_per_s_cascade",
                    "serve_frames_per_s_cascade_fused",
-                   "serve_frames_per_s_continuous")
+                   "serve_frames_per_s_continuous",
+                   "serve_frames_per_s_temporal")
 # latency keys: LOWER is better — fail when the fresh run is more than
 # the tolerance ABOVE the committed baseline (host-gated like the
 # absolute frames/s keys)
@@ -88,12 +93,19 @@ INVARIANT_FLOORS = {
     # serve the same stream no slower than the host-side cascade — a
     # same-run paired ratio, so it holds on any host
     "cascade_fused_speedup_vs_host": 1.0,
+    # skipping unchanged frames must never be slower than recomputing
+    # them: gated vs gate-off replay of the same committed video trace
+    # through the same kernel — a same-run paired ratio, any host
+    "temporal_speedup_vs_full": 1.0,
 }
 # cross-key invariants: (lhs, rhs) pairs where fresh[lhs] must stay
 # strictly below fresh[rhs] — the continuous admission window must burn
 # fewer padding slots than the static pad (host-independent)
 CROSS_KEY_BELOW = (
     ("serve_padding_ratio_continuous", "serve_padding_ratio_static"),
+    # billing skipped frames at delta-compute-only cost must undercut
+    # the ungated bill on the committed trace (pure energy-model ratio)
+    ("temporal_uj_per_frame", "temporal_uj_per_frame_ungated"),
 )
 
 

@@ -53,9 +53,18 @@ lowers through Mosaic):
    uJ/frame for both, with ``serve_p99_speedup_vs_static`` and
    ``serve_energy_ratio_vs_static`` floored at 1.0 (continuous must win
    both on the streaming workload) and the per-frame latency traces
-   written to ``BENCH_latency_trace.json``.
+   written to ``benchmarks/out/BENCH_latency_trace.json``;
+10. **temporal delta gating**: the same seeded video trace (static
+    backgrounds + moving patches, committed seed) replayed through the
+    delta-gated pipeline at threshold 1 (skip bit-identical frames)
+    and at ``-inf`` (gate off = recompute everything) — paired rounds
+    give ``temporal_speedup_vs_full`` (floored at 1.0) and the
+    chip-model ``temporal_uj_per_frame`` must undercut the ungated
+    bill at perfect label agreement.
 
-Results go to ``BENCH_fresh.json`` (override with ``BENCH_KERNELS_JSON``);
+Results go to ``benchmarks/out/BENCH_fresh.json`` (override with
+``BENCH_KERNELS_JSON``; the committed baseline refresh below writes to
+the repo root, everything else stays out of the tree);
 ``benchmarks/check_regression.py`` compares a fresh run against the
 *committed* baseline ``BENCH_kernels.json`` and fails CI when the
 frames/s keys regress more than 10% (ratio floors on any host; absolute
@@ -85,9 +94,12 @@ from repro.core.chip import energy, interpreter, networks, neuron_array as na
 from repro.kernels import autotune, ops, ref
 from repro.kernels import binary_conv2x2 as _bc
 
-# default to a fresh-run file: the committed BENCH_kernels.json baseline
-# is only overwritten on an explicit BENCH_KERNELS_JSON=BENCH_kernels.json
-BENCH_JSON = os.environ.get("BENCH_KERNELS_JSON", "BENCH_fresh.json")
+# default to a fresh-run file under the (gitignored) scratch directory:
+# the committed BENCH_kernels.json baseline is only overwritten on an
+# explicit BENCH_KERNELS_JSON=BENCH_kernels.json
+BENCH_JSON = os.environ.get("BENCH_KERNELS_JSON",
+                            os.path.join("benchmarks", "out",
+                                         "BENCH_fresh.json"))
 
 
 def _bench(fn, *args, iters=5):
@@ -544,7 +556,9 @@ def _bench_continuous_serve(results):
     results["serve_slo_ms"] = round(slo_ms, 2)
 
     trace_json = os.environ.get("BENCH_LATENCY_JSON",
-                                "BENCH_latency_trace.json")
+                                os.path.join("benchmarks", "out",
+                                             "BENCH_latency_trace.json"))
+    os.makedirs(os.path.dirname(trace_json) or ".", exist_ok=True)
     with open(trace_json, "w") as f:
         json.dump({"meta": dict(kind=trace.kind, seed=seed,
                                 rate=round(rate, 1), n=n_frames,
@@ -915,6 +929,92 @@ def _bench_fleet(results):
     return ok
 
 
+def _bench_temporal(results):
+    """Delta-gated always-on video vs full recompute on the SAME
+    committed seeded trace: a static-background + moving-patch scene
+    (``video_trace``, seed pinned below) replayed twice through the
+    identical delta kernel — once at threshold 1 (skip bit-identical
+    packed frames) and once at ``-inf`` (gate off, every lane
+    recomputes).  Paired alternation (see _bench_megakernel) makes the
+    median per-pair ratio the speedup estimator —
+    ``temporal_speedup_vs_full`` is a >= 1.0 floor in
+    ``check_regression.py``, and the chip-model ``temporal_uj_per_frame``
+    must undercut the ungated bill.  Both paths run the same kernel, so
+    labels must be bit-exact vs each other AND the offline oracle."""
+    from repro.launch import chip_serve
+    from repro.serving import ChipServer, TemporalPipeline, video_trace
+
+    batch, n_steps = 8, 16
+    prog = networks.mnist5()
+    art = chip_serve.build_artifact(prog, seed=77, warm_bn=True)
+    io = prog.instrs[0]
+    trace = video_trace((io.height, io.width, io.in_channels), n_steps,
+                        streams=batch, seed=77, change_rate=0.25,
+                        levels=2 ** io.bits)
+    n_frames = len(trace) * trace.streams
+    plan = interpreter.compile_plan(prog)
+    flat = trace.frames.reshape((-1,) + trace.frames.shape[2:])
+    oracle = np.asarray(jax.jit(
+        lambda pk, im: plan.forward(pk, im)[1])(
+            interpreter.ensure_packed(art), jnp.asarray(flat)))
+
+    def run(threshold):
+        server = ChipServer({"mnist5": prog}, {"mnist5": art}, batch=batch)
+        pipe = TemporalPipeline(server, "mnist5", threshold=threshold,
+                                rb=2)
+        t0 = time.perf_counter()
+        for t in range(len(trace)):            # time-major: one dispatch
+            for s in range(trace.streams):     # per camera tick
+                pipe.submit(trace.frames[t, s])
+        out = sorted(pipe.drain(), key=lambda r: r.rid)
+        dt = time.perf_counter() - t0
+        rep = pipe.report()
+        skip = pipe.skip_ratio
+        server.close()
+        return out, dt, rep, skip
+
+    run(float("-inf"))                         # warm the compile caches
+    run(1.0)                                   # (same kernel either way)
+    t_full = t_gated = float("inf")
+    ratios = []
+    ok = True
+    out_g = []
+    rep_g = rep_f = None
+    skip = 0.0
+    for _ in range(5):
+        out_f, tf, rep_f, _ = run(float("-inf"))
+        out_g, tg, rep_g, skip = run(1.0)
+        t_full, t_gated = min(t_full, tf), min(t_gated, tg)
+        ratios.append(tf / tg)
+        ok = ok and [r.label for r in out_g] == [r.label for r in out_f]
+    speedup = sorted(ratios)[len(ratios) // 2]
+    fps = n_frames / t_gated
+    agree = float(np.mean([r.label == int(oracle[r.rid])
+                           for r in out_g]))
+    ok = (ok and agree == 1.0 and skip > 0.0
+          and rep_g.uj_per_frame < rep_g.uj_per_frame_ungated)
+
+    print(f"\n== Temporal delta gating (mnist5 always-on video, "
+          f"{trace.streams} streams x {n_steps} steps, threshold 1) ==")
+    print(f"full recompute     : {t_full * 1e3:8.1f} ms/stream "
+          f"({rep_f.uj_per_frame:.2f} uJ/frame)")
+    print(f"delta gated        : {t_gated * 1e3:8.1f} ms/stream "
+          f"({speedup:.2f}x, {fps:,.0f} frames/s)")
+    print(f"gated bill         : {rep_g.uj_per_frame:.2f} uJ/frame vs "
+          f"{rep_g.uj_per_frame_ungated:.2f} ungated "
+          f"(skip ratio {skip:.2f}, {rep_g.savings:.2f}x saved)")
+    print(f"labels bit-exact vs full path + offline oracle: {ok}")
+    results["temporal_skip_ratio"] = round(skip, 3)
+    results["temporal_speedup_vs_full"] = round(speedup, 2)
+    results["temporal_uj_per_frame"] = round(rep_g.uj_per_frame, 3)
+    results["temporal_uj_per_frame_ungated"] = round(
+        rep_g.uj_per_frame_ungated, 3)
+    results["temporal_label_agreement"] = round(agree, 3)
+    results["temporal_ms_per_stream"] = round(t_gated * 1e3, 2)
+    results["serve_frames_per_s_temporal"] = round(fps, 1)
+    return ok
+
+
 def run(csv: bool = True):
     import platform
     results = {"backend": jax.default_backend(),
@@ -933,11 +1033,13 @@ def run(csv: bool = True):
     ok_fused_casc = _bench_cascade_fused(results)
     ok_ctrl = _bench_controller(results)
     ok_fleet = _bench_fleet(results)
+    ok_temporal = _bench_temporal(results)
     ok = (ok_mm and ok_pipe and ok_mega and ok_serve and ok_cont
           and ok_shared and ok_cascade and ok_fused_casc and ok_ctrl
-          and ok_fleet)
+          and ok_fleet and ok_temporal)
     results["autotune_cache"] = autotune.cache_path()
 
+    os.makedirs(os.path.dirname(BENCH_JSON) or ".", exist_ok=True)
     with open(BENCH_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     print(f"\nwrote {BENCH_JSON}")

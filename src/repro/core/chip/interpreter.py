@@ -822,6 +822,165 @@ def pack_cascade(programs: Mapping[str, isa.Program],
     return plan, image
 
 
+# ---------------------------------------------------------------------------
+# Delta plans: in-kernel frame-delta gating for always-on video streams
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeltaPlan:
+    """One program compiled for delta-gated always-on serving.
+
+    The always-on workload BinarEye's headline numbers assume is *video*:
+    consecutive frames of a quiet scene are nearly identical, so running
+    the full network on every frame burns energy re-deriving the label it
+    already has.  This plan pairs the program's whole-network megakernel
+    with resident temporal state — each stream's last packed thermometer
+    frame and its cached logits — and gates recompute *inside* the
+    dispatch (``kernels.megakernel.delta_forward``): the packed Hamming
+    distance ``popcount(cur XOR last)`` is compared per lane against a
+    dynamic int32 threshold, changed lanes compact into the cascade's
+    escalation-queue idiom and recompute, skipped lanes emit their cached
+    logits at delta-compute-only cost.
+
+    The gate is bit-exact vs a host reference: packed Hamming distances
+    are integers, so ``d >= threshold  <=>  d >= ceil(threshold)``, and
+    :meth:`delta_ctrl` folds host float thresholds into the kernel's
+    int32 control word (``-inf`` recomputes everything — the forced
+    first-dispatch / post-reset state — and ``+inf`` skips everything;
+    both sentinels are beyond any reachable distance).  At threshold 0
+    every live lane recomputes and the merged logits equal the plain
+    megakernel's bit for bit.
+    """
+    name: str
+    program: isa.Program
+    plan: InferencePlan
+    spec: Tuple[Any, ...]                      # 1-member composite spec
+
+    @property
+    def classes(self) -> int:
+        return self.spec[0][-1][2]
+
+    @property
+    def geometry(self) -> Tuple[int, int, int]:
+        io = self.spec[0][0]
+        return io[1], io[2], io[3]
+
+    @property
+    def packed_words(self) -> Tuple[int, int, int]:
+        """(H, W, channels//32): one stream's last-frame state shape."""
+        io = self.spec[0][0]
+        return io[1], io[2], io[5] // binarize.PACK_WIDTH
+
+    @staticmethod
+    def delta_ctrl(threshold: float, n_real: int):
+        """Fold a host-side float change threshold into the kernel's
+        dynamic ``(1, 2)`` int32 control word ``[threshold, n_real]``.
+
+        Packed Hamming distances d are integers, so ``d >= threshold``
+        (the host rule, float) holds iff ``d >= ceil(threshold)`` — the
+        ceil makes the integer compare bit-exact for every float
+        threshold.  ``-inf`` (recompute all — the cold-state dispatch)
+        and ``+inf`` (skip all) clamp to the int32 extremes, both
+        unreachable by real distances.  ``n_real`` masks padding lanes
+        out of the change queue.
+        """
+        if math.isnan(threshold):
+            raise ValueError("delta threshold must not be NaN")
+        thr = (_INT32_MIN if threshold == float("-inf") else
+               _INT32_MAX if threshold == float("inf") else
+               int(min(max(math.ceil(threshold), _INT32_MIN), _INT32_MAX)))
+        return jnp.array([[thr, int(n_real)]], jnp.int32)
+
+    def init_state(self, n: int):
+        """Cold per-stream state for ``n`` streams: zeroed last-frame
+        words + zeroed cached logits.  Cold state is *not* a valid gate
+        reference — pair the first dispatch with a ``-inf`` threshold
+        (``delta_ctrl(float("-inf"), n)``) so every lane recomputes and
+        the state warms from real frames."""
+        h, w, cw = self.packed_words
+        return (jnp.zeros((n, h, w, cw), jnp.uint32),
+                jnp.zeros((n, self.classes), jnp.int32))
+
+    def forward_delta(self, image, frames: jax.Array, last, llog, ctrl,
+                      interpret: bool | None = None,
+                      bb: Optional[int] = None, ft: Optional[int] = None,
+                      rb: Optional[int] = None, check_every: int = 1):
+        """One gated dispatch: advance every stream by one time step.
+
+        ``ctrl`` is the dynamic control word from :meth:`delta_ctrl`
+        (dynamic, so threshold sweeps and ragged batches never retrace).
+        Returns ``(logits, labels, new_last, new_llog, queue, counts,
+        deltas)``: ``logits`` (float32) / ``labels`` merge fresh answers
+        for changed lanes with cached answers for skipped lanes;
+        ``new_last`` / ``new_llog`` are the next dispatch's state;
+        ``counts[0] = K`` changed lanes, ``queue[:K]`` their ascending
+        indices, ``counts[1]`` the frame slots computed (>= K — drain-
+        chunk padding, billed by the serving layer); ``deltas`` the
+        per-lane packed Hamming distances.  ``bb``/``ft`` resolve
+        through the autotune cache; tile sizes and ``rb``/
+        ``check_every`` are pure schedule choices — bit-exact for every
+        setting.
+        """
+        bb, ft = autotune.mega_tiles(self.program, frames.shape[0],
+                                     bb=bb, ft=ft)
+        logits, new_last, queue, counts, deltas = kops.delta_forward(
+            image, frames, last, llog, ctrl, spec=self.spec, bb=bb,
+            rb=0 if rb is None else rb, ft=ft, check_every=check_every,
+            interpret=interpret)
+        lf = logits.astype(jnp.float32)
+        return (lf, jnp.argmax(lf, axis=-1), new_last, logits,
+                queue, counts, deltas)
+
+    def make_serve_fn(self, mesh=None, donate_frames: bool = False,
+                      interpret: bool | None = None,
+                      bb: Optional[int] = None, ft: Optional[int] = None,
+                      rb: Optional[int] = None, check_every: int = 1):
+        """jit: (image, frames, last, llog, ctrl) -> gated outputs.
+
+        The gated dispatch does not shard: the change queue compacts
+        across the whole batch and the last-frame/last-logits state is
+        batch-global resident VMEM, so scattering frames over a mesh
+        would split both mid-dispatch.  A 1-device mesh (or ``None``)
+        serves on the default device; multi-device meshes are rejected —
+        shard by running one :class:`DeltaPlan` per device over disjoint
+        stream sets instead.
+        """
+        if mesh is not None and mesh.devices.size > 1:
+            raise ValueError(
+                "delta-gated dispatch does not shard over a multi-device "
+                "mesh (the change queue and resident last-frame state are "
+                "batch-global); run one DeltaPlan per device over "
+                "disjoint stream sets instead")
+        fwd = lambda image, frames, last, llog, ctrl: self.forward_delta(
+            image, frames, last, llog, ctrl, interpret=interpret,
+            bb=bb, ft=ft, rb=rb, check_every=check_every)
+        donate = (1, 2, 3) if donate_frames else ()
+        return jax.jit(fwd, donate_argnums=donate)
+
+
+def pack_delta(program: isa.Program, artifact, *, name: str = "program"):
+    """Compile a delta-gated serving unit: (DeltaPlan, weight image).
+
+    The image is the program's own megakernel weight image
+    (:func:`ensure_image`) and the spec is the one-member composite lift
+    of ``InferencePlan.mega`` — the gated kernel shares the megakernel's
+    member body, so the recompute path is bit-exact vs ``forward_mega``
+    by construction.
+    """
+    isa.validate(program)
+    io = program.instrs[0]
+    if io.channels % binarize.PACK_WIDTH:
+        raise isa.ProgramError(
+            f"delta gating needs IO channels % {binarize.PACK_WIDTH} == 0 "
+            f"(packed Hamming distance), got {io.channels}")
+    plan = compile_plan(program)
+    spec = (tuple(st if st[0] == "io" else st + (0,)
+                  for st in plan.mega),)
+    image = ensure_image(artifact, program)
+    return (DeltaPlan(name=name, program=program, plan=plan, spec=spec),
+            image)
+
+
 def forward_infer(folded, program: isa.Program, images: jax.Array,
                   use_kernels: bool = False, interpret: bool | None = None):
     """Deployment forward. Returns (logits, labels).

@@ -614,6 +614,214 @@ def cascade_forward(image, frames: jax.Array, ctrl, *, spec,
     return det[:b], rec[:b], qout[:b, 0], cnt[0]
 
 
+# ---------------------------------------------------------------------------
+# In-kernel frame-delta gating: popcount gate -> change queue -> recompute
+# ---------------------------------------------------------------------------
+
+def _delta_kernel(frames_hbm, ctrl_ref, last_ref, llog_ref,
+                  cw_ref, ct_ref, cf_ref, fw_ref,
+                  log_out, last_out, queue, count, delta_out,
+                  fbuf, gbuf, in_sem, g_sem,
+                  *, spec, bb: int, rb: int, bpad: int,
+                  check_every: int, ft):
+    """One grid step of the delta-gated megakernel.
+
+    Grid = (n_tiles + 1,): every step but the last streams one frame
+    tile (the cascade kernel's 2-slot double-buffered DMA), thermometer-
+    packs it in-kernel, and computes the packed Hamming distance against
+    the resident last-frame words (``popcount(cur XOR ref)`` summed per
+    lane — the same integer domain the conv kernel works in).  Lanes
+    whose delta reaches the ``ctrl`` threshold are *changed*: their
+    indices compact into the VMEM ``queue`` (order-preserving, exactly
+    the cascade's escalation compaction) and their last-frame words
+    advance to the current frame; unchanged lanes keep their reference
+    words, so drift never accumulates while a lane coasts.  The final
+    step drains the queue through the network in chunks of ``rb``
+    (:func:`bounded_drain_loop`), scattering fresh logits into an output
+    that was *initialized from the resident last-logits buffer* — skipped
+    lanes therefore emit their cached logits and the merged output doubles
+    as the next step's last-logits state.  count[0, 0] = changed count,
+    count[0, 1] = frame slots actually computed (the energy bill's
+    recompute + chunk-padding figure).
+    """
+    (member,) = spec
+    _, h, w, cin, bits, channels = member[0]
+    n_tiles = bpad // bb
+    n_chunks = -(-bpad // rb)
+    i = pl.program_id(0)
+    slot = jax.lax.rem(i, 2)
+    nxt = jax.lax.rem(i + 1, 2)
+
+    def in_copy(s, t):
+        return pltpu.make_async_copy(frames_hbm.at[pl.ds(t * bb, bb)],
+                                     fbuf.at[s], in_sem.at[s])
+
+    @pl.when(i == 0)                     # init + warm-up DMA for tile 0
+    def _():
+        count[...] = jnp.zeros_like(count)
+        queue[...] = jnp.zeros_like(queue)
+        log_out[...] = llog_ref[...]     # skipped lanes -> cached logits
+        in_copy(0, 0).start()
+
+    @pl.when(i + 1 < n_tiles)            # tile N+1 streams while N gates
+    def _():
+        in_copy(nxt, i + 1).start()
+
+    thr = ctrl_ref[0, 0]
+    n_real = ctrl_ref[0, 1]
+
+    @pl.when(i < n_tiles)                # gate phase: one frame tile
+    def _():
+        in_copy(slot, i).wait()
+        cur = thermometer_pack(fbuf[slot], bits, cin, channels)
+        ref = last_ref[pl.ds(i * bb, bb)]
+        d = jnp.sum(jax.lax.population_count(cur ^ ref).astype(jnp.int32),
+                    axis=(1, 2, 3))
+        gidx = i * bb + jnp.arange(bb, dtype=jnp.int32)
+        live = gidx < n_real
+        mask = (d >= thr) & live
+        delta_out[pl.ds(i * bb, bb)] = jnp.where(live, d, 0)[:, None]
+        # the reference advances ONLY on recompute: a coasting lane's
+        # delta stays measured against the frame that produced its
+        # cached logits, so sub-threshold drift cannot accumulate
+        last_out[pl.ds(i * bb, bb)] = jnp.where(
+            mask[:, None, None, None], cur, ref)
+        # order-preserving compaction into the change queue (the
+        # cascade's escalation idiom)
+        cnt = count[0, 0]
+        tgt = jnp.where(mask, cnt + jnp.cumsum(mask) - 1, bpad)
+        queue[...] = queue[...].at[tgt, 0].set(gidx, mode="drop")
+        count[0, 0] = cnt + jnp.sum(mask)
+
+    @pl.when(i == n_tiles)               # recompute phase: drain the queue
+    def _():
+        total = count[0, 0]
+
+        def chunk(c):
+            # ragged tail clamps into range; overlapped rows recompute
+            # idempotently (same queue entries, same scatter targets)
+            base = jnp.minimum(c * rb, bpad - rb)
+            idxs = queue[pl.ds(base, rb)][:, 0]
+            copies = [pltpu.make_async_copy(
+                frames_hbm.at[pl.ds(idxs[j], 1)],
+                gbuf.at[pl.ds(j, 1)], g_sem.at[j]) for j in range(rb)]
+            for cp in copies:            # gather rb frames by queue index
+                cp.start()
+            for cp in copies:
+                cp.wait()
+            logits = _run_member(gbuf[...], cw_ref[...], ct_ref[...],
+                                 cf_ref[...], fw_ref[...], member,
+                                 _member_ft(ft, spec, 0))
+            for j in range(rb):          # scatter fresh logits by index
+                log_out[pl.ds(idxs[j], 1)] = logits[j:j + 1]
+            count[0, 1] = count[0, 1] + rb   # slots computed = the bill
+
+        bounded_drain_loop(lambda g0: g0 * rb < total, chunk,
+                           n_chunks, check_every)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spec", "bb", "rb", "ft", "check_every", "interpret"))
+def delta_forward(image, frames: jax.Array, last, llog, ctrl, *, spec,
+                  bb: int = 8, rb: int = 0, ft=0, check_every: int = 1,
+                  interpret: bool = False):
+    """Delta-gated whole-network inference in ONE resident ``pallas_call``.
+
+    image:  the program's weight image (``interpreter.pack_delta`` /
+            ``fold_params(..., image=True)``), VMEM-resident throughout.
+    frames: (B, H, W, Cin) integer images — batch slot b is *stream* b
+            of an always-on deployment; one call advances every stream
+            by one time step.
+    last:   (B, H, W, channels//32) uint32 — each stream's resident
+            last-frame words (the packed thermometer encoding of the
+            frame that produced its cached logits).
+    llog:   (B, classes) int32 — each stream's cached logits.
+    ctrl:   (1, 2) int32 ``[threshold, n_real]`` (build with
+            ``DeltaPlan.delta_ctrl``): the change threshold on the packed
+            Hamming distance (dynamic — threshold sweeps never retrace)
+            and the count of real (non-padding) streams.
+    spec:   static 1-member composite spec.
+    bb/ft:  frame-tile / conv f-tile sizes.
+    rb:     recompute chunk size (0 = ``bb``): changed frames drain
+            through the network ``rb`` at a time.
+    check_every: drain-loop condition re-check period, in chunks.
+
+    Returns ``(logits (B, C), new_last (B, H, W, Cw), queue (B,),
+    counts (2,), deltas (B,))``.  ``logits`` merges fresh logits for
+    changed lanes with cached logits for skipped lanes — it is also the
+    next call's ``llog``.  ``new_last`` is the next call's ``last``.
+    ``counts[0]`` is the changed count K; ``queue[:K]`` holds the changed
+    frame indices ascending.  ``counts[1]`` is the number of frame slots
+    computed (>= K: chunk padding) — the recompute energy bill.
+    ``deltas`` are the per-lane packed Hamming distances (0 for padding).
+    """
+    if len(spec) != 1:
+        raise ValueError(
+            f"delta spec needs exactly 1 member, got {len(spec)}")
+    (member,) = spec
+    io = member[0]
+    assert io[0] == "io", member
+    h, w, cin, bits, channels = io[1], io[2], io[3], io[4], io[5]
+    cpw = channels // PACK_WIDTH
+    final = member[-1]
+    assert final[0] == "fc" and final[3], member
+    ncls = final[2]
+
+    b = frames.shape[0]
+    bb = max(1, min(bb, b))
+    bpad = -(-b // bb) * bb
+    n_tiles = bpad // bb
+    rb = max(1, min(rb if rb else bb, bpad))
+
+    if last.shape != (b, h, w, cpw):
+        raise ValueError(f"last-frame state must be {(b, h, w, cpw)}, "
+                         f"got {last.shape}")
+    if llog.shape != (b, ncls):
+        raise ValueError(f"last-logits state must be {(b, ncls)}, "
+                         f"got {llog.shape}")
+    frames = frames.astype(jnp.int32)
+    last = jnp.asarray(last, jnp.uint32)
+    llog = jnp.asarray(llog, jnp.int32)
+    if bpad != b:
+        frames = jnp.pad(frames, ((0, bpad - b),) + ((0, 0),) * 3)
+        last = jnp.pad(last, ((0, bpad - b),) + ((0, 0),) * 3)
+        llog = jnp.pad(llog, ((0, bpad - b), (0, 0)))
+    ctrl = jnp.asarray(ctrl, jnp.int32).reshape(1, 2)
+
+    def resident(arr):                   # whole array, fetched once
+        nd = arr.ndim
+        return pl.BlockSpec(arr.shape, lambda i, _n=nd: (0,) * _n)
+
+    def vmem_out(shape):                 # VMEM-resident across the grid
+        nd = len(shape)
+        return pl.BlockSpec(shape, lambda i, _n=nd: (0,) * _n)
+
+    logits, new_last, qout, cnt, deltas = pl.pallas_call(
+        functools.partial(_delta_kernel, spec=spec, bb=bb, rb=rb,
+                          bpad=bpad, check_every=check_every, ft=ft),
+        grid=(n_tiles + 1,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),   # frames: HBM
+                  resident(ctrl), resident(last), resident(llog),
+                  resident(image["cw"]), resident(image["ct"]),
+                  resident(image["cf"]), resident(image["fw"])],
+        out_specs=[vmem_out((bpad, ncls)), vmem_out((bpad, h, w, cpw)),
+                   vmem_out((bpad, 1)), vmem_out((1, 2)),
+                   vmem_out((bpad, 1))],
+        out_shape=[jax.ShapeDtypeStruct((bpad, ncls), jnp.int32),
+                   jax.ShapeDtypeStruct((bpad, h, w, cpw), jnp.uint32),
+                   jax.ShapeDtypeStruct((bpad, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 2), jnp.int32),
+                   jax.ShapeDtypeStruct((bpad, 1), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((2, bb, h, w, cin), jnp.int32),
+                        pltpu.VMEM((rb, h, w, cin), jnp.int32),
+                        pltpu.SemaphoreType.DMA((2,)),
+                        pltpu.SemaphoreType.DMA((rb,))],
+        interpret=interpret,
+    )(frames, ctrl, last, llog,
+      image["cw"], image["ct"], image["cf"], image["fw"])
+    return logits[:b], new_last[:b], qout[:b, 0], cnt[0], deltas[:b, 0]
+
+
 def megakernel_forward(image, frames: jax.Array, *, spec,
                        bb: int = 8, ft: int = 0,
                        interpret: bool = False) -> jax.Array:

@@ -114,6 +114,25 @@ def cascade_forward(image, frames, ctrl, *, spec, bb: int = 8, rb: int = 0,
                                interpret=interpret)
 
 
+def delta_forward(image, frames, last, llog, ctrl, *, spec, bb: int = 8,
+                  rb: int = 0, ft=0, check_every: int = 1,
+                  interpret: bool | None = None):
+    """Delta-gated whole-network inference in one resident ``pallas_call``:
+    each frame tile is thermometer-packed in-kernel and popcount-XORed
+    against the resident last-frame words; lanes whose packed Hamming
+    distance reaches the ``ctrl`` threshold compact into the change queue
+    and recompute through the bounded drain loop, while skipped lanes
+    emit their cached logits.  Returns (logits, new_last, queue, counts,
+    deltas) — see ``megakernel.delta_forward`` for the state contract and
+    ``interpreter.pack_delta`` for building ``image``/``spec``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _mk.delta_forward(image, frames, last, llog, ctrl, spec=spec,
+                             bb=bb, rb=rb, ft=ft, check_every=check_every,
+                             interpret=interpret)
+
+
 def member_groups(spec):
     """A composite spec's sub-array groups (members with shape-identical
     IO+conv chains stack into one fused conv); per-group ``ft`` tuples

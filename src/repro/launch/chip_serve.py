@@ -38,6 +38,19 @@ Two runtime modes on top of plain static serving:
 
       PYTHONPATH=src python -m repro.launch.chip_serve --cascade
 
+* ``--video`` serves a seeded always-on *video* stream through the
+  delta-gated temporal pipeline: each batch slot carries one camera
+  stream, the in-kernel popcount gate recomputes only the streams whose
+  packed frame actually changed (``--delta-threshold``), and skipped
+  frames answer from the resident last-logits cache at delta-compute-
+  only cost.  ``--target-agreement A`` calibrates the cheapest
+  threshold still agreeing with ungated labels at rate A on a held-out
+  trace; ``--target-skip S`` instead picks the smallest threshold
+  reaching skip ratio S::
+
+      PYTHONPATH=src python -m repro.launch.chip_serve \
+          --video --change-rate 0.2 --target-agreement 0.95
+
 * ``--traffic {poisson,bursty,diurnal}`` replays a seeded arrival trace
   in real time instead of enqueueing everything up front — the streaming
   workload the paper's always-on figures assume.  ``--rate`` sets the
@@ -158,6 +171,32 @@ def main(argv=None):
                          "split instead of using --margin: the cheapest "
                          "margin whose escalations capture R of the "
                          "positive frames (detector-labelled)")
+    ap.add_argument("--video", action="store_true",
+                    help="serve a seeded video stream through the delta-"
+                         "gated temporal pipeline: skip unchanged frames "
+                         "in-kernel, answer them from the last-logits "
+                         "cache (first --programs entry; batch = streams)")
+    ap.add_argument("--delta-threshold", type=float, default=1.0,
+                    help="packed-Hamming gate: a stream recomputes when "
+                         "its frame delta vs the resident last frame "
+                         "reaches this many bits (1 = skip only bit-"
+                         "identical frames; -inf = gate off)")
+    ap.add_argument("--target-agreement", type=float, default=None,
+                    metavar="A",
+                    help="calibrate the gate threshold on a held-out "
+                         "video trace: the cheapest threshold whose "
+                         "gated labels agree with ungated inference on "
+                         "at least A of the frames")
+    ap.add_argument("--target-skip", type=float, default=None, metavar="S",
+                    help="calibrate the gate threshold for energy: the "
+                         "smallest threshold reaching skip ratio S on a "
+                         "held-out video trace")
+    ap.add_argument("--change-rate", type=float, default=0.25,
+                    help="video trace: per-stream probability a frame "
+                         "differs from the previous one")
+    ap.add_argument("--scene-every", type=int, default=0,
+                    help="video trace: full scene change every N frames "
+                         "(0 = never)")
     ap.add_argument("--no-warm-bn", action="store_true",
                     help="skip the one-batch BN warm (faster, cruder "
                          "thresholds)")
@@ -180,6 +219,8 @@ def main(argv=None):
 
     if args.cascade:
         return run_cascade(args)
+    if args.video:
+        return run_video(args)
 
     names = [n.strip() for n in args.programs.split(",") if n.strip()]
     families = {}
@@ -475,6 +516,87 @@ def run_cascade(args):
     print(f"cascade bill        : {rep.uj_per_frame:.2f} uJ/frame vs "
           f"{rep.uj_per_frame_recognizer_only:.2f} recognizer-on-every-"
           f"frame ({rep.savings:.2f}x saved; paper: 0.92 -> 14.4 uJ/f)")
+    return results, rep
+
+
+def run_video(args):
+    """Always-on video through the delta-gated temporal pipeline: one
+    camera stream per batch slot over a seeded content trace
+    (``traffic.video_trace``), in-kernel popcount gating against the
+    resident last frame, skipped frames answered from the last-logits
+    cache and billed at delta-compute-only cost.
+
+    ``--target-agreement`` / ``--target-skip`` calibrate the threshold
+    on a disjoint-seed held-out trace (agreement vs ungated labels, or a
+    skip-ratio energy contract) instead of taking ``--delta-threshold``
+    verbatim.
+    """
+    from repro.serving import temporal
+    from repro.serving.traffic import video_trace
+
+    if args.target_agreement is not None and args.target_skip is not None:
+        raise SystemExit("--target-agreement and --target-skip are "
+                         "mutually exclusive")
+    name = args.programs.split(",")[0].strip()
+    if name not in networks.REGISTRY:
+        raise SystemExit(f"unknown program {name!r}; have "
+                         f"{sorted(networks.REGISTRY)}")
+    program = networks.REGISTRY[name]()
+    io = program.instrs[0]
+    print(f"folding deployment artifact for {name} ...")
+    artifact = build_artifact(program, args.seed, not args.no_warm_bn)
+    prefetch = (args.prefetch_depth if args.prefetch_depth is not None
+                else int(args.prefetch))
+    server = ChipServer({name: program}, {name: artifact}, batch=args.batch,
+                        megakernel=args.megakernel, prefetch=prefetch)
+    # fine-grained drain chunks: recompute work scales with the changed
+    # count instead of rounding every dispatch up to a full batch
+    pipe = temporal.TemporalPipeline(server, name,
+                                     threshold=args.delta_threshold,
+                                     rb=max(1, args.batch // 4))
+    steps = -(-args.requests // args.batch)
+    shape = (io.height, io.width, io.in_channels)
+    if args.target_agreement is not None or args.target_skip is not None:
+        cal = video_trace(shape, max(steps, 8), streams=args.batch,
+                          seed=args.seed + 200,
+                          change_rate=args.change_rate,
+                          scene_change_every=args.scene_every,
+                          levels=2 ** io.bits)
+        if args.target_agreement is not None:
+            thr = pipe.calibrate(cal.frames, args.target_agreement)
+            print(f"calibrated threshold: {thr:.0f} bits (target "
+                  f"agreement {args.target_agreement:.2f} on "
+                  f"{len(cal) * cal.streams} held-out frames)")
+        else:
+            thr = temporal.threshold_for_skip(cal.frames, args.target_skip,
+                                              program=program)
+            pipe.threshold = thr
+            print(f"calibrated threshold: {thr:.0f} bits (target skip "
+                  f"{args.target_skip:.2f} on {len(cal) * cal.streams} "
+                  f"held-out frames)")
+    trace = video_trace(shape, steps, streams=args.batch,
+                        seed=args.seed + 100, change_rate=args.change_rate,
+                        scene_change_every=args.scene_every,
+                        levels=2 ** io.bits)
+    print(f"video stream        : {args.batch} streams x {steps} frames "
+          f"(change rate {args.change_rate:.2f}, "
+          f"{trace.change_ratio:.2f} actually changed, seed "
+          f"{args.seed + 100}), gate >= {pipe.threshold:.0f} bits")
+    for t in range(len(trace)):
+        for s in range(trace.streams):
+            pipe.submit(trace.frames[t, s])
+    results = pipe.drain()
+    rep = pipe.report()
+    stats = server.stats()
+    print(f"\ntemporal served {len(results)} frames in "
+          f"{pipe.gated_dispatches} gated dispatches: {rep.computed} "
+          f"computed (+{rep.computed_padded} drain padding), "
+          f"{rep.skipped} skipped (skip ratio {rep.skip_ratio:.2f})")
+    print(f"host-sim throughput : {stats.host_frames_per_s:,.0f} frames/s")
+    print(f"temporal bill       : {rep.uj_per_frame:.3f} uJ/frame "
+          f"({rep.delta_uj:.3f} delta toll on every frame) vs "
+          f"{rep.uj_per_frame_ungated:.3f} ungated "
+          f"({rep.savings:.2f}x saved)")
     return results, rep
 
 

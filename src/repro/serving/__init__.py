@@ -10,8 +10,10 @@ Mechanism/policy split (see :mod:`repro.serving.server` for the model and
 * fleet    — N-replica serve fleet with failover migration and
   warm-started replacement hosts (:mod:`.fleet`)
 * cascade  — detector -> recognizer always-on pipelines (:mod:`.cascade`)
-* traffic  — seeded arrival traces + replay for latency benches
-  (:mod:`.traffic`)
+* temporal — delta-gated always-on video serving: skip unchanged
+  frames, downshift quiet scenes (:mod:`.temporal`)
+* traffic  — seeded arrival traces + replay for latency benches, plus
+  seeded video *content* traces for the temporal tier (:mod:`.traffic`)
 """
 
 from repro.serving.cascade import (CascadePipeline,  # noqa: F401
@@ -39,8 +41,16 @@ from repro.serving.queue import (  # noqa: F401
     plan_shared_groups,
 )
 from repro.serving.server import ChipServer, ServeStats  # noqa: F401
+from repro.serving.temporal import (  # noqa: F401
+    TemporalPipeline,
+    TemporalResult,
+    calibrate_delta_threshold,
+    simulate_gate,
+    threshold_for_skip,
+)
 from repro.serving.traffic import (  # noqa: F401
     ArrivalTrace,
+    VideoTrace,
     VirtualClock,
     bursty_trace,
     diurnal_trace,
@@ -49,4 +59,5 @@ from repro.serving.traffic import (  # noqa: F401
     poisson_trace,
     replay,
     save_trace,
+    video_trace,
 )

@@ -99,6 +99,7 @@ class Executor:
             self._fns[name] = self._serve_fn(plan, (prog,))
         self._composites: Dict[Tuple[str, ...], Dict[str, Any]] = {}
         self._cascades: Dict[Tuple[str, str, int], Dict[str, Any]] = {}
+        self._deltas: Dict[Tuple[str, Optional[int], int], Dict[str, Any]] = {}
         self._inflight: collections.deque = collections.deque()
         # background fetch only pays off at depth >= 2: with one handle
         # in flight the consumer blocks on it immediately, so a thread
@@ -109,8 +110,11 @@ class Executor:
             if self.prefetch >= 2 else None)
 
     def _serve_fn(self, plan, progs: Tuple[isa.Program, ...],
-                  kind: str = "serve"):
-        """Build (or warm-start) the jit'd serve fn for ``plan``."""
+                  kind: str = "serve", **extra):
+        """Build (or warm-start) the jit'd serve fn for ``plan``.
+        ``extra`` kwargs pass through to ``plan.make_serve_fn`` — the
+        caller must fold them into ``kind`` so the warm-start key
+        distinguishes them."""
         # CompositePlan.make_serve_fn has no megakernel knob (a composite
         # IS one fused pallas_call already) — only single-program plans
         # take it.
@@ -119,6 +123,7 @@ class Executor:
                                   interpret=self._interpret)
         if kind == "serve":
             kw["megakernel"] = self._megakernel
+        kw.update(extra)
         build = lambda: plan.make_serve_fn(**kw)
         if not self._warm_start:
             return build()
@@ -175,6 +180,30 @@ class Executor:
             casc = dict(plan=cplan, image=cimage, fn=cfn)
             self._cascades[key] = casc
         return casc
+
+    def delta_for(self, variant: str, *, rb: Optional[int] = None,
+                  check_every: int = 1) -> Dict[str, Any]:
+        """The compiled delta-gated serving unit for one resident
+        variant (lazy; cached like :meth:`composite_for`): the variant's
+        ``DeltaPlan`` + megakernel weight image + jit'd stateful serve
+        fn ``(image, frames, last, llog, ctrl) -> gated outputs``.
+        ``rb``/``check_every`` tune the recompute-drain chunking and are
+        part of the cache key (distinct knobs -> distinct compiles)."""
+        key = (variant, rb, check_every)
+        dl = self._deltas.get(key)
+        if dl is None:
+            dplan, dimage = interpreter.pack_delta(
+                self.programs[variant], self._raw_artifacts[variant],
+                name=variant)
+            if self.mesh is not None:
+                dimage = sharding.replicate_artifact(self.mesh, dimage)
+            dfn = self._serve_fn(
+                dplan, (self.programs[variant],),
+                kind="delta.r%s.c%d" % (rb or 0, check_every),
+                rb=rb, check_every=check_every)
+            dl = dict(plan=dplan, image=dimage, fn=dfn)
+            self._deltas[key] = dl
+        return dl
 
     def warm_composites(self, groups) -> None:
         """Precompile composites for admission-time groups (static

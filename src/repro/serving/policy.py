@@ -211,22 +211,36 @@ class OperatingPointPolicy(DispatchPolicy):
     point).  With ``shared=True`` other backlogged lanes whose chosen
     variants tile the 256-channel array exactly ride the same dispatch
     as an on-the-fly composite.
+
+    A temporal runtime (``serving/temporal.py``) may additionally report
+    each lane's *scene activity* — the fraction of its streams whose
+    frame delta crossed the gate threshold — via :meth:`set_activity`;
+    a lane whose activity sits below ``activity_low`` downshifts one
+    extra step (a quiet scene needs neither the accuracy nor the energy
+    of the top operating point).  Lanes that never report activity are
+    untouched.
     """
 
     name = "operating-point"
 
     def __init__(self, budget_uj_s: Optional[float] = None,
                  backlog_high: Optional[int] = None,
-                 shared: bool = False) -> None:
+                 shared: bool = False,
+                 activity_low: float = 0.25) -> None:
         super().__init__()
         if budget_uj_s is not None and budget_uj_s <= 0:
             raise ValueError(
                 f"budget_uj_s must be positive, got {budget_uj_s}")
+        if not 0.0 <= activity_low <= 1.0:
+            raise ValueError(
+                f"activity_low must be in [0, 1], got {activity_low}")
         self.budget_uj_s = budget_uj_s
         self.backlog_high = backlog_high
         self.shared = shared
+        self.activity_low = activity_low
         self.spent_uj = 0.0             # committed chip-model energy
         self.chip_time_s = 0.0          # committed chip-model time
+        self._activity: Dict[str, float] = {}   # lane -> reported activity
 
     def _bound(self) -> None:
         ctx = self.ctx
@@ -234,6 +248,7 @@ class OperatingPointPolicy(DispatchPolicy):
         # reset (a reused instance must not carry another server's spend)
         self.spent_uj = 0.0
         self.chip_time_s = 0.0
+        self._activity = {}
         self._backlog_high = (self.backlog_high if self.backlog_high
                               is not None else 4 * ctx.batch)
         # variants energy-descending per lane; one frame of variant v
@@ -251,12 +266,26 @@ class OperatingPointPolicy(DispatchPolicy):
     def variant_order(self, lane: str) -> Tuple[str, ...]:
         return self._order[lane]
 
+    def set_activity(self, lane: str, activity: float) -> None:
+        """Report a lane's scene activity in [0, 1] — the fraction of
+        its streams whose frame delta crossed the gate threshold (the
+        temporal runtime's per-step signal, typically an EWMA).  Quiet
+        lanes (below ``activity_low``) downshift one extra operating
+        point on subsequent dispatches."""
+        if lane not in self._order:
+            raise KeyError(f"unknown lane {lane!r} "
+                           f"(have {sorted(self._order)})")
+        if not 0.0 <= activity <= 1.0:
+            raise ValueError(
+                f"activity must be in [0, 1], got {activity}")
+        self._activity[lane] = activity
+
     def _choose(self, lane: str, pending: int, size: int,
                 spent: float, time: float) -> str:
         """Most accurate affordable variant for ``lane`` at dispatch size
         ``size``, given committed totals ``(spent, time)``; backlog
-        pressure downshifts one more step; the cheapest variant is the
-        unconditional floor."""
+        pressure and quiet-scene activity each downshift one more step;
+        the cheapest variant is the unconditional floor."""
         order = self._order[lane]
         idx = len(order) - 1                      # floor: cheapest
         for i, v in enumerate(order):
@@ -267,6 +296,9 @@ class OperatingPointPolicy(DispatchPolicy):
                 break
         if pending >= self._backlog_high:
             idx = min(idx + 1, len(order) - 1)    # catch-up downshift
+        act = self._activity.get(lane)
+        if act is not None and act < self.activity_low:
+            idx = min(idx + 1, len(order) - 1)    # quiet-scene downshift
         return order[idx]
 
     def select(self, queue: FrameQueue) -> Optional[Dispatch]:

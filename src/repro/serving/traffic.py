@@ -216,6 +216,115 @@ def make_trace(kind: str, lanes: Sequence[str], rate: float, n: int, *,
 
 
 # ---------------------------------------------------------------------------
+# video content: seeded frame sequences for the delta-gated temporal path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VideoTrace:
+    """A seeded multi-stream video *content* trace.
+
+    Where :class:`ArrivalTrace` answers "when do frames arrive", this
+    answers "what do the frames look like" — the signal the delta-gated
+    serving path (``serving/temporal.py``) keys on.  ``frames`` is
+    time-major: ``frames[t, s]`` is stream ``s``'s frame at step ``t``,
+    so submitting step-by-step round-robin keeps each stream pinned to
+    its batch slot.  ``changed[t, s]`` is the pixel-exact ground truth
+    "does frame t differ from frame t-1 on stream s" (step 0 is always
+    True: there is no predecessor to coast on).  ``meta`` records the
+    generator parameters — enough to regenerate the trace exactly.
+    """
+    seed: int
+    frames: np.ndarray                  # (T, streams, H, W, C) int32
+    changed: np.ndarray                 # (T, streams) bool
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.frames.ndim != 5:
+            raise ValueError(
+                f"frames must be (T, streams, H, W, C), "
+                f"got shape {self.frames.shape}")
+        if self.changed.shape != self.frames.shape[:2]:
+            raise ValueError(
+                f"changed must be {self.frames.shape[:2]}, "
+                f"got {self.changed.shape}")
+
+    def __len__(self) -> int:
+        return self.frames.shape[0]
+
+    @property
+    def streams(self) -> int:
+        return self.frames.shape[1]
+
+    @property
+    def change_ratio(self) -> float:
+        """Realised fraction of (step, stream) frames that changed."""
+        return float(self.changed.mean()) if self.changed.size else 0.0
+
+
+def video_trace(shape: Tuple[int, int, int], n: int, *, streams: int = 1,
+                seed: int = 0, change_rate: float = 0.5,
+                scene_change_every: int = 0, patch: int = 4,
+                levels: int = 16) -> VideoTrace:
+    """Seeded always-on camera content: static background + moving patch
+    + optional scene-change events.
+
+    Per stream: a random static background; each step the frame either
+    *repeats bit-identically* (probability ``1 - change_rate`` — the
+    quiet-scene case the delta gate skips) or the background reappears
+    with a ``patch`` x ``patch`` block shifted by half the intensity
+    range at a fresh random position (local motion).  Every
+    ``scene_change_every`` steps (0 = never) the whole background
+    regenerates — the scene-change event that must flush cached labels.
+    ``shape`` is (H, W, C); ``levels`` is the pixel intensity range
+    (``2 ** io.bits`` for a given program).  Deterministic in ``seed``;
+    ``changed`` is computed pixel-exactly from the emitted frames, so it
+    is ground truth even when two motion events coincide.
+    """
+    h, w, c = shape
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if streams < 1:
+        raise ValueError(f"streams must be >= 1, got {streams}")
+    if not 0.0 <= change_rate <= 1.0:
+        raise ValueError(
+            f"change_rate must be in [0, 1], got {change_rate}")
+    if levels < 2:
+        raise ValueError(f"levels must be >= 2, got {levels}")
+    if scene_change_every < 0:
+        raise ValueError(f"scene_change_every must be >= 0, "
+                         f"got {scene_change_every}")
+    rng = np.random.default_rng(seed)
+    ph, pw = min(patch, h), min(patch, w)
+    frames = np.empty((n, streams, h, w, c), dtype=np.int32)
+    changed = np.zeros((n, streams), dtype=bool)
+    bg = rng.integers(0, levels, (streams, h, w, c), dtype=np.int32)
+    for t in range(n):
+        for s in range(streams):
+            scene_cut = t > 0 and scene_change_every and (
+                t % scene_change_every == 0)
+            if scene_cut:
+                bg[s] = rng.integers(0, levels, (h, w, c), dtype=np.int32)
+            if t == 0 or scene_cut:
+                frames[t, s] = bg[s]
+            elif rng.random() < change_rate:
+                f = bg[s].copy()
+                y = int(rng.integers(0, h - ph + 1))
+                x = int(rng.integers(0, w - pw + 1))
+                f[y:y + ph, x:x + pw] = (
+                    f[y:y + ph, x:x + pw] + levels // 2) % levels
+                frames[t, s] = f
+            else:
+                frames[t, s] = frames[t - 1, s]    # quiet: bit-identical
+            changed[t, s] = t == 0 or not np.array_equal(
+                frames[t, s], frames[t - 1, s])
+    return VideoTrace(seed=seed, frames=frames, changed=changed,
+                      meta=dict(kind="video", shape=list(shape), n=n,
+                                streams=streams, change_rate=change_rate,
+                                scene_change_every=scene_change_every,
+                                patch=patch, levels=levels))
+
+
+# ---------------------------------------------------------------------------
 # serialization: the committed bench trace must be host-independent
 # ---------------------------------------------------------------------------
 
